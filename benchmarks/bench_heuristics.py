@@ -1,0 +1,51 @@
+"""Paper Fig. 8: OULD vs the three heuristics (Nearest / HRM / Nearest-HRM)
+on a single fixed-snapshot configuration.
+
+Claims: OULD latency ≤ every heuristic at every load (it is the optimum);
+Nearest beats the memory-driven heuristics (air-to-air rates dominate)."""
+
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core import evaluate, solve_heuristic, solve_ould
+
+from .common import HIGH_MEM, Csv, snapshot_problem, timed
+
+
+def run(csv: Csv) -> dict:
+    loads = [2, 6, 10, 14]
+    methods = ["ould", "nearest", "hrm", "nearest_hrm"]
+    res = {m: {"lat": [], "shared": []} for m in methods}
+    optimal_everywhere = True
+    nearest_wins = 0
+    for r in loads:
+        prob = snapshot_problem("lenet", 12, r, mem=HIGH_MEM, seed=3)
+        evs = {}
+        for m in methods:
+            if m == "ould":
+                sol, us = timed(solve_ould, prob, mip_rel_gap=1e-4,
+                                time_limit=30.0)
+            else:
+                sol, us = timed(solve_heuristic, prob, m)
+            ev = evaluate(prob, sol)
+            evs[m] = ev
+            res[m]["lat"].append(ev.avg_latency_per_request)
+            res[m]["shared"].append(ev.shared_bytes / 1e6)
+            csv.add(f"heuristics/{m}/R{r}", us,
+                    f"lat={ev.avg_latency_per_request:.4f}s "
+                    f"adm={ev.n_admitted}")
+        full = [m for m in methods if evs[m].n_admitted == r]
+        if "ould" in full:
+            for m in full:
+                if evs[m].avg_latency_per_request < \
+                        evs["ould"].avg_latency_per_request - 1e-9:
+                    optimal_everywhere = False
+        if ("nearest" in full and "hrm" in full and
+                evs["nearest"].avg_latency_per_request
+                <= evs["hrm"].avg_latency_per_request + 1e-12):
+            nearest_wins += 1
+    csv.add("heuristics/claims", 0.0,
+            f"OULD_is_optimal={optimal_everywhere} "
+            f"nearest<=hrm_in_{nearest_wins}_of_{len(loads)}")
+    return res

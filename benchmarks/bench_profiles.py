@@ -1,0 +1,28 @@
+"""Paper Fig. 3 + Table I: per-layer inference memory footprints (LeNet,
+VGG-16 at 595×326 RGB) and the parameter counts of Table I's architectures.
+
+Claim: the VGG-16 total footprint exceeds any single 256/512 MB node (the
+motivation for distribution), LeNet's does not."""
+
+from __future__ import annotations
+
+from repro.core import lenet_profile, vgg16_profile
+
+from .common import HIGH_MEM, LOW_MEM, Csv
+
+
+def run(csv: Csv) -> dict:
+    res = {}
+    for name, prof in (("lenet", lenet_profile()), ("vgg16", vgg16_profile())):
+        per_layer = [l.memory_bytes / 1e6 for l in prof.layers]
+        res[name] = per_layer
+        csv.add(f"profiles/{name}", 0.0,
+                f"M={prof.num_layers} total={prof.total_memory / 1e6:.0f}MB "
+                f"flops={prof.total_flops / 1e9:.1f}GF "
+                f"max_layer={max(per_layer):.0f}MB")
+    vgg_needs_dist = sum(res["vgg16"]) * 1e6 > HIGH_MEM
+    lenet_fits = sum(res["lenet"]) * 1e6 < HIGH_MEM
+    csv.add("profiles/claims", 0.0,
+            f"vgg_exceeds_single_node={vgg_needs_dist} "
+            f"lenet_fits_single_node={lenet_fits}")
+    return res

@@ -1,0 +1,143 @@
+"""§Roofline: reads the dry-run artifacts and emits the three-term roofline
+table per (arch × shape) on the single-pod mesh (+ multi-pod pass/fail).
+
+Terms (seconds, per spec):
+  compute    = HLO_FLOPs  / (chips × 197 TFLOP/s)
+  memory     = HLO_bytes  / (chips × 819 GB/s)
+  collective = collective_bytes / (chips × 50 GB/s per link)
+
+HLO_FLOPs/bytes are the probe-derived per-partition values × chips (the
+two-point probe corrects XLA's count-loop-body-once behaviour; see
+launch/dryrun.py).  MODEL_FLOPS = 6·N·D (dense) / 6·N_active·D (MoE),
+×(1/3) for inference shapes (forward only ⇒ 2·N·D).
+"""
+
+from __future__ import annotations
+
+import json
+import pathlib
+
+import repro.configs as C
+from repro.configs.base import SHAPES
+
+from .common import Csv
+
+ART = pathlib.Path(__file__).resolve().parent / "artifacts" / "dryrun"
+PEAK_FLOPS = 197e12
+HBM_BW = 819e9
+LINK_BW = 50e9
+
+
+def active_params(arch: str) -> float:
+    cfg = C.get_config(arch)
+    d, L = cfg.d_model, cfg.n_layers
+    hd = cfg.hd
+    attn = d * (cfg.n_heads + 2 * cfg.n_kv) * hd + cfg.n_heads * hd * d
+    if cfg.mla is not None:
+        m = cfg.mla
+        qk = m.qk_nope_head_dim + m.qk_rope_head_dim
+        attn = (d * m.q_lora_rank + m.q_lora_rank * cfg.n_heads * qk
+                + d * (m.kv_lora_rank + m.qk_rope_head_dim)
+                + m.kv_lora_rank * cfg.n_heads * (m.qk_nope_head_dim
+                                                  + m.v_head_dim)
+                + cfg.n_heads * m.v_head_dim * d)
+    if cfg.moe is not None:
+        ffn = cfg.moe.top_k * 3 * d * cfg.d_ff + d * cfg.moe.num_experts
+    elif cfg.d_ff > 0:
+        ffn = 3 * d * cfg.d_ff
+    else:
+        ffn = 0
+    per_block = attn + ffn
+    if "mlstm" in cfg.block_pattern:
+        di = 2 * d
+        per_block = (d * 2 * di + di * 3 * di + di * 2 * cfg.n_heads
+                     + di * d) * 7 / 8 + (4 * d * d + d * d) / 8
+    if cfg.family == "hybrid":
+        s = cfg.ssm
+        di = s.expand * d
+        per_block = attn + 3 * d * cfg.d_ff + 2 * d * di + di * d
+    embed = 2 * cfg.vocab * d
+    return L * per_block + embed
+
+
+def model_flops(arch: str, shape_name: str) -> float:
+    cfg = C.get_config(arch)
+    sh = SHAPES[shape_name]
+    n = active_params(arch)
+    if sh.kind == "train":
+        tokens = sh.seq_len * sh.global_batch
+        return 6.0 * n * tokens
+    if sh.kind == "prefill":
+        return 2.0 * n * sh.seq_len * sh.global_batch
+    return 2.0 * n * sh.global_batch        # decode: one token per sequence
+
+
+def load(arch: str, shape: str, mesh: str) -> dict | None:
+    p = ART / f"{arch}__{shape}__{mesh}.json"
+    if not p.exists():
+        return None
+    return json.loads(p.read_text())
+
+
+def roofline_row(rec: dict) -> dict:
+    chips = rec["chips"]
+    flops_pp = rec.get("derived_flops_per_partition",
+                       rec.get("flops_per_partition", 0.0))
+    bytes_pp = rec.get("derived_bytes_per_partition",
+                       rec.get("bytes_per_partition", 0.0))
+    coll_pp = rec.get("derived_coll_per_partition",
+                      rec["collectives"]["weighted_link_traffic"])
+    t_c = flops_pp / PEAK_FLOPS
+    t_m = bytes_pp / HBM_BW
+    t_l = coll_pp / LINK_BW
+    dom = max((t_c, "compute"), (t_m, "memory"), (t_l, "collective"))[1]
+    mf = model_flops(rec["arch"], rec["shape"])
+    return {"compute_s": t_c, "memory_s": t_m, "collective_s": t_l,
+            "dominant": dom, "model_flops": mf,
+            "useful_ratio": mf / max(flops_pp * chips, 1.0),
+            "roofline_frac": max(t_c, t_m, t_l) and t_c / max(t_c, t_m, t_l)}
+
+
+def run(csv: Csv) -> dict:
+    res = {}
+    for arch in C.ARCH_IDS:
+        for shape in SHAPES:
+            rec = load(arch, shape, "single")
+            multi = load(arch, shape, "multi")
+            mstat = multi["status"] if multi else "missing"
+            if rec is None:
+                csv.add(f"roofline/{arch}/{shape}", 0.0, "missing")
+                continue
+            if rec["status"] == "skipped":
+                csv.add(f"roofline/{arch}/{shape}", 0.0,
+                        f"SKIP ({rec['reason']}) multi={mstat}")
+                continue
+            if rec["status"] != "ok":
+                csv.add(f"roofline/{arch}/{shape}", 0.0,
+                        f"ERROR {rec.get('error', '?')[:80]}")
+                continue
+            row = roofline_row(rec)
+            res[f"{arch}/{shape}"] = row
+            csv.add(f"roofline/{arch}/{shape}", rec["compile_s"] * 1e6,
+                    f"compute={row['compute_s']:.4f}s "
+                    f"memory={row['memory_s']:.4f}s "
+                    f"collective={row['collective_s']:.4f}s "
+                    f"dom={row['dominant']} "
+                    f"useful={row['useful_ratio']:.2f} multi={mstat}")
+            opt = load(arch, shape, "single__opt")
+            if opt and opt["status"] == "ok":
+                o = roofline_row(opt)
+                base_dom = max(row["compute_s"], row["memory_s"],
+                               row["collective_s"])
+                opt_dom = max(o["compute_s"], o["memory_s"],
+                              o["collective_s"])
+                res[f"{arch}/{shape}/opt"] = o
+                csv.add(f"roofline/{arch}/{shape}/OPT",
+                        opt["compile_s"] * 1e6,
+                        f"compute={o['compute_s']:.4f}s "
+                        f"memory={o['memory_s']:.4f}s "
+                        f"collective={o['collective_s']:.4f}s "
+                        f"dom={o['dominant']} "
+                        f"useful={o['useful_ratio']:.2f} "
+                        f"dom_speedup={base_dom / max(opt_dom, 1e-12):.2f}x")
+    return res

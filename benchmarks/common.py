@@ -1,0 +1,75 @@
+"""Shared benchmark scaffolding: paper-calibrated node parameters, topology
+builders, CSV emission.
+
+Calibration (paper §IV): Raspberry-Pi-class UAVs, B=20 MHz, memory levels
+{256, 512} MB, compute 9.5 GFLOPS.  Capacity constraints are occupancy per
+decision period (we use a 10 s window ⇒ 95 GFLOP compute budget per node).
+Workloads: LeNet (M=7) and VGG-16 (M=18) on 595×326 RGB frames.
+"""
+
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from repro.core import (Problem, RPGMobility, RPGParams, RadioParams,
+                        lenet_profile, rate_matrix, vgg16_profile)
+
+MB = 1e6
+HIGH_MEM = 512 * MB
+LOW_MEM = 256 * MB
+GFLOPS = 9.5e9             # per-node compute speed (paper)
+PERIOD_S = 10.0            # decision window for the occupancy budget
+COMP_CAP = GFLOPS * PERIOD_S
+RADIO = RadioParams()
+
+PROFILES = {
+    "lenet": lenet_profile(),
+    "vgg16": vgg16_profile(),
+}
+
+
+def make_network(n_uavs: int, area_m: float, seed: int = 0,
+                 homogeneous: bool = True) -> RPGMobility:
+    return RPGMobility(RPGParams(n_uavs=n_uavs, area_m=area_m,
+                                 homogeneous=homogeneous), seed=seed)
+
+
+def snapshot_problem(model: str, n_uavs: int, requests: int, *,
+                     mem: float = HIGH_MEM, area: float = 100.0,
+                     seed: int = 0, hotspots: int = 3) -> Problem:
+    """Static single-snapshot OULD instance (paper §IV-A setting).
+
+    Requests originate at a few *hotspot* UAVs (the ones over the incident),
+    which is what makes distribution necessary: the data-generating nodes
+    saturate first while the rest of the swarm has idle capacity."""
+    mob = make_network(n_uavs, area, seed)
+    pos = mob.positions(1, seed=seed)[0]
+    rng = np.random.default_rng(seed)
+    sources = rng.integers(0, min(hotspots, n_uavs), requests).astype(np.int64)
+    return Problem(
+        profile=PROFILES[model],
+        mem_cap=np.full(n_uavs, mem),
+        comp_cap=np.full(n_uavs, COMP_CAP),
+        rates=rate_matrix(pos, RADIO),
+        sources=sources,
+        compute_speed=np.full(n_uavs, GFLOPS),
+    )
+
+
+class Csv:
+    """Collects `name,us_per_call,derived` rows (run.py contract)."""
+
+    def __init__(self):
+        self.rows: list[tuple[str, float, str]] = []
+
+    def add(self, name: str, us: float, derived: str = ""):
+        self.rows.append((name, us, derived))
+        print(f"{name},{us:.1f},{derived}", flush=True)
+
+
+def timed(fn, *args, **kw):
+    t0 = time.perf_counter()
+    out = fn(*args, **kw)
+    return out, (time.perf_counter() - t0) * 1e6

@@ -1,0 +1,48 @@
+"""Benchmark entry point — one module per paper table/figure.
+
+    PYTHONPATH=src python -m benchmarks.run [--only ould,mp,...]
+
+Prints ``name,us_per_call,derived`` CSV rows (collected via common.Csv) and
+writes benchmarks/artifacts/results.json.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import pathlib
+import sys
+
+sys.path.insert(0, str(pathlib.Path(__file__).resolve().parents[1] / "src"))
+
+from .common import Csv  # noqa: E402
+
+MODULES = ["profiles", "ould", "heuristics", "mp", "runtime",
+           "tpu_placement", "roofline"]
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None,
+                    help="comma-separated subset of: " + ",".join(MODULES))
+    args = ap.parse_args()
+    todo = args.only.split(",") if args.only else MODULES
+
+    csv = Csv()
+    print("name,us_per_call,derived")
+    results: dict = {}
+    for name in todo:
+        mod = __import__(f"benchmarks.bench_{name}", fromlist=["run"])
+        try:
+            results[name] = mod.run(csv)
+        except Exception as e:  # noqa: BLE001 — keep the suite going
+            csv.add(f"{name}/ERROR", 0.0, f"{type(e).__name__}: {e}")
+            results[name] = {"error": str(e)}
+    out = pathlib.Path(__file__).resolve().parent / "artifacts" / "results.json"
+    out.parent.mkdir(parents=True, exist_ok=True)
+    out.write_text(json.dumps(results, indent=1, default=str))
+    print(f"# wrote {out}")
+
+
+if __name__ == "__main__":
+    main()

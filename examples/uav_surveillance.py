@@ -1,0 +1,93 @@
+"""End-to-end paper scenario: a swarm of resource-constrained UAVs runs
+distributed CNN inference on captured frames.
+
+Pipeline (all real computation, simulated radio):
+  1. RPG mobility places 10 UAVs over the target area; Eq.(1) rates derived
+     from SINR/path-loss.
+  2. Frames arrive at hotspot UAVs → OULD (the paper's ILP) places each
+     request's LeNet layers across the swarm under 512 MB / 9.5 GFLOPS caps.
+  3. Each request executes for real: the JAX LeNet runs layer ranges per
+     stage; activations "transmitted" between UAVs are accounted against
+     the link rates to produce the end-to-end latency the paper plots.
+  4. OULD-MP re-plans once for the whole predicted horizon and the run
+     repeats while the swarm moves.
+
+    PYTHONPATH=src python examples/uav_surveillance.py
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import (Problem, evaluate, lenet_profile, solve_ould,
+                        solve_ould_mp, to_stages)
+from repro.core.mobility import RPGMobility, RPGParams
+from repro.core.radio import RadioParams, rate_matrix
+from repro.models import cnn
+
+MB = 1e6
+
+
+def execute_placed(layer_fns, x, stages, spb, input_bytes, k_bytes):
+    """Run the placed inference for real, accumulating simulated link time."""
+    t_comm = 0.0
+    prev_node = None
+    for st in stages:
+        if prev_node is not None and st.node != prev_node:
+            t_comm += k_bytes[st.layer_start - 1] * spb[prev_node, st.node]
+        x = cnn.apply_layers(layer_fns, x, st.layer_start, st.layer_end)
+        prev_node = st.node
+    return x, t_comm
+
+
+def main() -> None:
+    profile = lenet_profile()
+    params = cnn.lenet_init(jax.random.PRNGKey(0))
+    layer_fns = cnn.lenet_layers(params)
+
+    mob = RPGMobility(RPGParams(n_uavs=10, area_m=150.0, homogeneous=False),
+                      seed=0)
+    pos = mob.positions(1)[0]
+    rates = rate_matrix(pos, RadioParams())
+    rng = np.random.default_rng(0)
+    requests = 8
+    sources = rng.integers(0, 3, requests).astype(np.int64)
+
+    # 128 MB nodes: a whole LeNet (108 MB) + any second request cannot fit,
+    # so high loads force per-layer splits — the paper's core mechanism.
+    prob = Problem(profile, mem_cap=np.full(10, 128 * MB),
+                   comp_cap=np.full(10, 95e9), rates=rates, sources=sources,
+                   compute_speed=np.full(10, 9.5e9))
+    sol = solve_ould(prob, mip_rel_gap=1e-4, time_limit=20.0)
+    ev = evaluate(prob, sol)
+    print(f"OULD: {sol.status}, admitted {ev.n_admitted}/{requests}, "
+          f"avg latency {ev.avg_latency_per_request:.3f}s, "
+          f"shared {ev.shared_bytes / MB:.1f} MB")
+
+    spb = prob.transfer_cost()
+    k_bytes = profile.output_vector()
+    frames = rng.standard_normal((requests, 326, 595, 3)).astype(np.float32)
+    for r in range(requests):
+        if not sol.admitted[r]:
+            continue
+        stages = to_stages(sol.assign[r])
+        logits, t_comm = execute_placed(layer_fns, jnp.asarray(frames[r:r+1]),
+                                        stages, spb, profile.input_bytes,
+                                        k_bytes)
+        cls = int(jnp.argmax(logits[0]))
+        route = "->".join(str(s.node) for s in stages)
+        print(f"  request {r}: class={cls} route=[{route}] "
+              f"comm={t_comm * 1e3:.2f}ms")
+
+    # OULD-MP over a 5-step horizon while the swarm moves
+    mp = solve_ould_mp(profile, np.full(10, 256 * MB), np.full(10, 95e9),
+                       sources, mob, horizon=5,
+                       compute_speed=np.full(10, 9.5e9),
+                       mip_rel_gap=1e-3, time_limit=20.0)
+    lat = [f"{e.avg_latency_per_request:.3f}" for e in mp.per_step]
+    print(f"OULD-MP one-shot plan, per-step latency over horizon: {lat}")
+    print("uav_surveillance OK")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,3 @@
+from .manager import AsyncCheckpointer, CheckpointManager
+
+__all__ = ["AsyncCheckpointer", "CheckpointManager"]

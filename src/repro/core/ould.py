@@ -1,0 +1,398 @@
+"""OULD — Optimal UAV-based Layer Distribution (paper §III-B, Eq. 3–13)
+and OULD-MP — with mobility prediction (paper §III-C, Eq. 14–15).
+
+Decision variables
+------------------
+``α_{r,i,j} ∈ {0,1}``  — node i executes layer j of request r (Eq. 2).
+``γ_{r,i,k,j} ∈ {0,1}`` — node i runs layer j of r AND node k runs layer j+1
+(Eq. 9/10), introduced to linearize the bilinear objective via the big-M
+rules (Eq. 11):
+
+    γ ≤ α_{r,i,j},   γ ≤ α_{r,k,j+1},   γ ≥ α_{r,i,j} + α_{r,k,j+1} − 1.
+
+Objective (Eq. 12 + 13):  min Σ_r Σ_{i≠k} Σ_{j<M} γ_{r,i,k,j}·K_j/ρ_{i,k} + t_s
+with t_s the source-image transfer.  Because Σ_i α_{r,i,1} = 1 (Eq. 6), the
+source term is *already linear*: t_s = Σ_{k≠src(r)} α_{r,k,1}·K_s/ρ_{src,k}.
+
+Constraints: per-node memory (Eq. 4) and compute (Eq. 5) occupancy caps, and
+exactly-one placement per (request, layer) (Eq. 6); binariness (Eq. 7).
+
+Solvers
+-------
+* ``solver="ilp"``   — paper-faithful ILP via HiGHS (`scipy.optimize.milp`).
+  ``gamma_relaxed=True`` (default) declares γ continuous in [0,1]: with the
+  big-M inequalities and binary α, γ* = α_i·α_k at every vertex, so the optimum
+  is unchanged while the branch-and-bound tree only explores α.  This is an
+  exactness-preserving speedup (validated against the all-binary mode in
+  tests).  ``tight=True`` keeps the two ≤ inequalities the paper writes; they
+  are redundant for a non-negative objective but retained by default for
+  faithfulness.
+* ``solver="dp"``    — exact per-request shortest-path DP through the N×M
+  lattice when capacity constraints are slack; with contention it becomes a
+  sequential greedy-DP (requests placed one at a time, capacities decremented)
+  — our large-instance fallback, also the warm-start generator.
+
+OULD-MP is the same formulation with rate coefficients summed over the
+predicted horizon: cost(i,k) uses Σ_t 1/ρ_{i,k}(t) (Eq. 14).  A pair that is
+predicted to *disconnect* (ρ=0 at any t) gets an infinite coefficient, which
+is exactly the paper's argument for why MP avoids mid-mission outages.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Literal
+
+import numpy as np
+import scipy.sparse as sp
+from scipy.optimize import Bounds, LinearConstraint, milp
+
+from .profiles import ModelProfile
+
+Solver = Literal["ilp", "dp"]
+
+_BIG = 1e12  # stand-in for an unreachable (disconnected) pair
+
+
+@dataclasses.dataclass(frozen=True)
+class Problem:
+    """One OULD instance (a set of concurrent requests on a topology)."""
+
+    profile: ModelProfile
+    mem_cap: np.ndarray          # (N,) m̄_i, bytes
+    comp_cap: np.ndarray         # (N,) c̄_i, FLOPs budget per decision period
+    rates: np.ndarray            # (N,N) ρ bits/s — or (T,N,N) for OULD-MP
+    sources: np.ndarray          # (R,) source node of each request (μ_{i,r})
+    compute_speed: np.ndarray | None = None  # (N,) FLOPs/s for latency eval
+    rate_unit_bytes: float = 1 / 8.0  # bits/s rates → bytes = K·8/ρ
+
+    @property
+    def n_nodes(self) -> int:
+        return int(self.mem_cap.shape[0])
+
+    @property
+    def n_requests(self) -> int:
+        return int(self.sources.shape[0])
+
+    @property
+    def n_layers(self) -> int:
+        return self.profile.num_layers
+
+    def horizon(self) -> int:
+        return 1 if self.rates.ndim == 2 else int(self.rates.shape[0])
+
+    def transfer_cost(self) -> np.ndarray:
+        """(N,N) seconds per byte between node pairs, summed over the horizon
+        (Eq. 14 sums transfer latency over t ∈ {1..T})."""
+        rates = self.rates[None] if self.rates.ndim == 2 else self.rates
+        secs_per_byte = np.zeros(rates.shape[1:])
+        for t in range(rates.shape[0]):
+            r = rates[t]
+            with np.errstate(divide="ignore"):
+                spb = np.where(r > 0, (1.0 / self.rate_unit_bytes) / np.maximum(r, 1e-30), _BIG)
+            np.fill_diagonal(spb, 0.0)  # same node: no transfer
+            secs_per_byte = secs_per_byte + spb
+        return secs_per_byte
+
+
+@dataclasses.dataclass
+class Solution:
+    assign: np.ndarray           # (R, M) node index per (request, layer)
+    objective: float             # communication latency (paper objective)
+    status: str                  # "optimal" | "feasible" | "rejected:<n>"
+    solve_time_s: float
+    admitted: np.ndarray         # (R,) bool — False = request rejected
+    solver: str = "ilp"
+
+    @property
+    def n_admitted(self) -> int:
+        return int(self.admitted.sum())
+
+
+# ---------------------------------------------------------------------------
+# ILP construction
+# ---------------------------------------------------------------------------
+
+class _Index:
+    """Flat variable indexing: α block then γ block."""
+
+    def __init__(self, R: int, N: int, M: int):
+        self.R, self.N, self.M = R, N, M
+        self.n_alpha = R * N * M
+        # γ over r, j ∈ {1..M-1}, ordered pairs i≠k
+        self.pairs = [(i, k) for i in range(N) for k in range(N) if i != k]
+        self.n_gamma = R * (M - 1) * len(self.pairs)
+        self.n_vars = self.n_alpha + self.n_gamma
+        self._pair_id = {p: q for q, p in enumerate(self.pairs)}
+
+    def a(self, r: int, i: int, j: int) -> int:
+        return (r * self.N + i) * self.M + j
+
+    def g(self, r: int, j: int, i: int, k: int) -> int:
+        q = self._pair_id[(i, k)]
+        return self.n_alpha + (r * (self.M - 1) + j) * len(self.pairs) + q
+
+
+def _build_ilp(prob: Problem, *, include_compute: bool, tight: bool):
+    R, N, M = prob.n_requests, prob.n_nodes, prob.n_layers
+    idx = _Index(R, N, M)
+    spb = prob.transfer_cost()          # (N,N) seconds/byte over horizon
+    K = prob.profile.output_vector()    # K_j bytes
+    Ks = prob.profile.input_bytes
+    mem = prob.profile.memory_vector()
+    comp = prob.profile.compute_vector()
+
+    c = np.zeros(idx.n_vars)
+    # Source term t_s (Eq. 13): linear in α_{r,k,1}.
+    for r in range(R):
+        src = int(prob.sources[r])
+        for k in range(N):
+            if k != src:
+                c[idx.a(r, k, 0)] += Ks * spb[src, k]
+    # Inter-layer transfers (Eq. 12): γ_{r,i,k,j} · K_j / ρ_{i,k}.
+    for r in range(R):
+        for j in range(M - 1):
+            for (i, k) in idx.pairs:
+                c[idx.g(r, j, i, k)] += K[j] * spb[i, k]
+    if include_compute and prob.compute_speed is not None:
+        # Heterogeneous-speed extension (linear): Σ α_{r,i,j}·c_j/speed_i.
+        for r in range(R):
+            for i in range(N):
+                for j in range(M):
+                    c[idx.a(r, i, j)] += comp[j] / prob.compute_speed[i]
+
+    rows, cols, vals, lo, hi = [], [], [], [], []
+    row = 0
+
+    def add_row(entries, lo_v, hi_v):
+        nonlocal row
+        for col, v in entries:
+            rows.append(row)
+            cols.append(col)
+            vals.append(v)
+        lo.append(lo_v)
+        hi.append(hi_v)
+        row += 1
+
+    # Eq. 4 memory / Eq. 5 compute capacity per node.
+    for i in range(N):
+        add_row([(idx.a(r, i, j), mem[j]) for r in range(R) for j in range(M)],
+                -np.inf, float(prob.mem_cap[i]))
+    for i in range(N):
+        add_row([(idx.a(r, i, j), comp[j]) for r in range(R) for j in range(M)],
+                -np.inf, float(prob.comp_cap[i]))
+    # Eq. 6 exactly-one per (r, j).
+    for r in range(R):
+        for j in range(M):
+            add_row([(idx.a(r, i, j), 1.0) for i in range(N)], 1.0, 1.0)
+    # Eq. 11 big-M linking.
+    for r in range(R):
+        for j in range(M - 1):
+            for (i, k) in idx.pairs:
+                g = idx.g(r, j, i, k)
+                ai, ak = idx.a(r, i, j), idx.a(r, k, j + 1)
+                add_row([(g, 1.0), (ai, -1.0), (ak, -1.0)], -1.0, np.inf)
+                if tight:
+                    add_row([(g, 1.0), (ai, -1.0)], -np.inf, 0.0)
+                    add_row([(g, 1.0), (ak, -1.0)], -np.inf, 0.0)
+
+    A = sp.csc_matrix((vals, (rows, cols)), shape=(row, idx.n_vars))
+    return idx, c, LinearConstraint(A, np.array(lo), np.array(hi))
+
+
+def _solve_ilp_once(prob: Problem, *, include_compute: bool, tight: bool,
+                    gamma_relaxed: bool, time_limit: float | None,
+                    mip_rel_gap: float) -> tuple[np.ndarray | None, float, str]:
+    R, N, M = prob.n_requests, prob.n_nodes, prob.n_layers
+    idx, c, constraints = _build_ilp(prob, include_compute=include_compute,
+                                     tight=tight)
+    # Normalize the objective so HiGHS tolerances (~1e-7 absolute) are far
+    # below the cost scale — latencies can be microseconds on fast links.
+    finite = np.abs(c[np.isfinite(c) & (np.abs(c) > 0) & (np.abs(c) < _BIG)])
+    scale = 1.0 / finite.max() if finite.size else 1.0
+    c = np.minimum(c * scale, 1e9)  # disconnected pairs stay priced out
+    integrality = np.zeros(idx.n_vars)
+    integrality[: idx.n_alpha] = 1
+    if not gamma_relaxed:
+        integrality[:] = 1
+    opts: dict = {"mip_rel_gap": mip_rel_gap}
+    if time_limit is not None:
+        opts["time_limit"] = time_limit
+    res = milp(c, constraints=constraints, integrality=integrality,
+               bounds=Bounds(0.0, 1.0), options=opts)
+    # status 0 = optimal; 1 = hit time/iteration limit (accept incumbent)
+    if res.status not in (0, 1) or res.x is None:
+        return None, float("inf"), "infeasible" if res.status == 2 else f"status{res.status}"
+    alpha = res.x[: idx.n_alpha].reshape(R, N, M)
+    assign = alpha.argmax(axis=1).astype(np.int64)  # (R, M)
+    return (assign, float(res.fun) / scale,
+            "optimal" if res.status == 0 else "feasible")
+
+
+# ---------------------------------------------------------------------------
+# Exact per-request DP (lattice shortest path) + sequential greedy-DP
+# ---------------------------------------------------------------------------
+
+def _dp_single_request(spb: np.ndarray, K: list[float], Ks: float, src: int,
+                       mem: list[float], comp: list[float],
+                       mem_left: np.ndarray, comp_left: np.ndarray,
+                       compute_cost: np.ndarray | None) -> tuple[np.ndarray | None, float]:
+    """Shortest path through the (layer, node) lattice for one request.
+
+    State cost(j, i): min latency to have layer j's output resident on node i.
+    Edge (j-1,k) → (j,i): K_{j-1}·spb[k,i] (0 if k == i).  Feasibility of
+    putting layer j on node i uses *remaining* capacity — exact for a single
+    request when the node never needs to split a single layer.
+    """
+    N, M = spb.shape[0], len(K)
+    INF = float("inf")
+    feas = np.zeros((M, N), bool)
+    for j in range(M):
+        feas[j] = (mem_left >= mem[j]) & (comp_left >= comp[j])
+    cost = np.full((M, N), INF)
+    back = np.full((M, N), -1, np.int64)
+    for i in range(N):
+        if feas[0, i]:
+            cost[0, i] = 0.0 if i == src else Ks * spb[src, i]
+            if compute_cost is not None:
+                cost[0, i] += compute_cost[0, i]
+    for j in range(1, M):
+        # NOTE: single-request DP treats per-layer feasibility independently;
+        # when one node hosts several layers of the SAME request the combined
+        # load is checked post-hoc by the caller and repaired greedily.
+        prev = cost[j - 1]
+        step = prev[:, None] + np.array(K[j - 1]) * spb  # (k→i)
+        if compute_cost is not None:
+            step = step + compute_cost[j][None, :]
+        step[:, ~feas[j]] = INF
+        back[j] = step.argmin(axis=0)
+        cost[j] = step[back[j], np.arange(N)]
+    end = int(np.argmin(cost[-1]))
+    if not np.isfinite(cost[-1, end]):
+        return None, INF
+    path = np.zeros(M, np.int64)
+    path[-1] = end
+    for j in range(M - 1, 0, -1):
+        path[j - 1] = back[j, path[j]]
+    return path, float(cost[-1, end])
+
+
+def _repair_capacity(path: np.ndarray, mem: list[float], comp: list[float],
+                     mem_left: np.ndarray, comp_left: np.ndarray) -> bool:
+    """Check a DP path against *joint* per-node load; True if it fits."""
+    N = mem_left.shape[0]
+    m_use = np.zeros(N)
+    c_use = np.zeros(N)
+    for j, i in enumerate(path):
+        m_use[i] += mem[j]
+        c_use[i] += comp[j]
+    return bool(np.all(m_use <= mem_left + 1e-9) and np.all(c_use <= comp_left + 1e-9))
+
+
+def _solve_dp(prob: Problem, *, include_compute: bool) -> tuple[np.ndarray, float, np.ndarray]:
+    """Sequential greedy-DP: requests placed one at a time (exact per request,
+    greedy across requests).  Returns (assign, total_comm_latency, admitted)."""
+    R, N, M = prob.n_requests, prob.n_nodes, prob.n_layers
+    spb = prob.transfer_cost()
+    K = prob.profile.output_vector()
+    mem = prob.profile.memory_vector()
+    comp = prob.profile.compute_vector()
+    compute_cost = None
+    if include_compute and prob.compute_speed is not None:
+        per_layer = np.array(comp)[:, None] / prob.compute_speed[None, :]
+        compute_cost = per_layer * prob.horizon()
+    mem_left = prob.mem_cap.astype(float).copy()
+    comp_left = prob.comp_cap.astype(float).copy()
+    assign = np.zeros((R, M), np.int64)
+    admitted = np.zeros(R, bool)
+    total = 0.0
+    for r in range(R):
+        path, cost = _dp_single_request(
+            spb, K, prob.profile.input_bytes, int(prob.sources[r]),
+            mem, comp, mem_left, comp_left, compute_cost)
+        # Repair loop: the lattice DP checks per-layer feasibility, not the
+        # joint within-request load.  Iteratively shrink the advertised
+        # memory AND compute of the most-overloaded node and re-plan —
+        # forces the DP to spread until the joint check passes.
+        mem_adv = mem_left.copy()
+        comp_adv = comp_left.copy()
+        for _ in range(4 * N):
+            if path is None or _repair_capacity(path, mem, comp, mem_left,
+                                                comp_left):
+                break
+            m_load = np.zeros(N)
+            c_load = np.zeros(N)
+            for j, i in enumerate(path):
+                m_load[i] += mem[j]
+                c_load[i] += comp[j]
+            m_over = m_load - mem_left
+            c_over = c_load - comp_left
+            if m_over.max() >= c_over.max() / max(comp_left.max(), 1e-9) * \
+                    max(mem_left.max(), 1e-9):
+                busy = int(m_over.argmax())
+                mem_adv[busy] = max(mem_adv[busy] / 2.0, 0.0)
+                if mem_adv[busy] < min((m for m in mem if m > 0), default=0):
+                    mem_adv[busy] = 0.0
+            else:
+                busy = int(c_over.argmax())
+                comp_adv[busy] = max(comp_adv[busy] / 2.0, 0.0)
+                if comp_adv[busy] < min((c for c in comp if c > 0), default=0):
+                    comp_adv[busy] = 0.0
+            path, cost = _dp_single_request(
+                spb, K, prob.profile.input_bytes, int(prob.sources[r]),
+                mem, comp, mem_adv, comp_adv, compute_cost)
+        if path is None or not _repair_capacity(path, mem, comp, mem_left, comp_left):
+            admitted[r] = False
+            continue
+        for j, i in enumerate(path):
+            mem_left[i] -= mem[j]
+            comp_left[i] -= comp[j]
+        assign[r] = path
+        admitted[r] = True
+        total += cost
+    return assign, total, admitted
+
+
+# ---------------------------------------------------------------------------
+# Public entry point with admission control
+# ---------------------------------------------------------------------------
+
+def solve_ould(prob: Problem, *, solver: Solver = "ilp",
+               include_compute: bool = False, tight: bool = True,
+               gamma_relaxed: bool = True, time_limit: float | None = None,
+               mip_rel_gap: float = 1e-6) -> Solution:
+    """Solve an OULD / OULD-MP instance.
+
+    When the full request set is infeasible (system over capacity), requests
+    are shed from the tail until feasible — the paper's 'additional incoming
+    requests are rejected' behaviour (§IV-A, shared-data plateaus).
+    """
+    t0 = time.perf_counter()
+    R = prob.n_requests
+    if solver == "dp":
+        assign, obj, admitted = _solve_dp(prob, include_compute=include_compute)
+        return Solution(assign, obj, "feasible", time.perf_counter() - t0,
+                        admitted, solver="dp")
+
+    admitted = np.ones(R, bool)
+    n_try = R
+    while n_try >= 1:
+        sub = Problem(prob.profile, prob.mem_cap, prob.comp_cap, prob.rates,
+                      prob.sources[:n_try], prob.compute_speed,
+                      prob.rate_unit_bytes)
+        assign, obj, status = _solve_ilp_once(
+            sub, include_compute=include_compute, tight=tight,
+            gamma_relaxed=gamma_relaxed, time_limit=time_limit,
+            mip_rel_gap=mip_rel_gap)
+        if assign is not None:
+            full = np.zeros((R, prob.n_layers), np.int64)
+            full[:n_try] = assign
+            admitted[:] = False
+            admitted[:n_try] = True
+            st = "optimal" if n_try == R else f"rejected:{R - n_try}"
+            return Solution(full, obj, st, time.perf_counter() - t0, admitted)
+        n_try -= 1
+    return Solution(np.zeros((R, prob.n_layers), np.int64), float("inf"),
+                    "infeasible", time.perf_counter() - t0,
+                    np.zeros(R, bool))

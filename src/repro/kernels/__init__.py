@@ -1,0 +1,13 @@
+"""Pallas TPU kernels (+ pure-jnp oracles and backend dispatch).
+
+flash_attention  — tiled online-softmax attention (causal/SWA/GQA)
+decode_attention — single-token flash-decode over (ring) KV caches
+ssm_scan         — chunked SSD selective scan, sequential-grid state carry
+rmsnorm          — fused single-pass row norm
+chunked          — XLA (backend-portable) chunked SSD / mLSTM
+ref              — oracles; ops — per-backend dispatch
+"""
+
+from . import chunked, ops, ref
+
+__all__ = ["chunked", "ops", "ref"]

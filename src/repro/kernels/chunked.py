@@ -1,0 +1,126 @@
+"""Chunked (sub-quadratic, scan-over-chunks) SSD and mLSTM — XLA path.
+
+The production forward pass for SSM/xLSTM blocks: O(S·Q) instead of O(S²),
+with a ``lax.scan`` over chunks carrying the recurrent state.  This is the
+TPU-friendly Mamba-2 "state-space duality" formulation; the Pallas kernel in
+``ssm_scan.py`` fuses one chunk's work into VMEM, this module is the
+backend-portable version (and the oracle used to cross-check the kernel is
+``ref.ssd_scan`` — sequential, trivially correct).
+
+Numerics: per-chunk log-space cumulative decays; pairwise differences inside
+a chunk keep every exponent ≤ 0, so no overflow; f32 accumulation throughout.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+# Dry-run probe knob: XLA's cost model counts a while-loop body ONCE, so the
+# roofline probes lower with all scans unrolled (launch/dryrun.py sets this
+# around probe lowering only — never for real execution).
+UNROLL_SCANS = False
+
+
+def _unroll(length: int) -> int:
+    return length if UNROLL_SCANS else 1
+
+
+def _chunk(x: jax.Array, q: int) -> jax.Array:
+    b, s = x.shape[0], x.shape[1]
+    return x.reshape(b, s // q, q, *x.shape[2:])
+
+
+def ssd_scan_chunked(x: jax.Array, a: jax.Array, b: jax.Array, c: jax.Array,
+                     h0: jax.Array | None = None, *, chunk: int = 256
+                     ) -> tuple[jax.Array, jax.Array]:
+    """Chunked evaluation of ``ref.ssd_scan`` (same signature + chunk).
+
+    x: (B,S,H,P), a: (B,S,H) in (0,1), b/c: (B,S,H,N).
+    """
+    B, S, H, P = x.shape
+    N = b.shape[-1]
+    dt = x.dtype
+    Q = min(chunk, S)
+    if S % Q:
+        pad = Q - S % Q
+        zf = lambda t: jnp.pad(t, [(0, 0), (0, pad)] + [(0, 0)] * (t.ndim - 2))
+        x, b, c = zf(x), zf(b), zf(c)
+        a = jnp.pad(a, [(0, 0), (0, pad), (0, 0)], constant_values=1.0)
+    Sp = x.shape[1]
+    xf = _chunk(x.astype(jnp.float32), Q)      # (B,G,Q,H,P)
+    bf = _chunk(b.astype(jnp.float32), Q)      # (B,G,Q,H,N)
+    cf = _chunk(c.astype(jnp.float32), Q)
+    la = _chunk(jnp.log(jnp.maximum(a.astype(jnp.float32), 1e-37)), Q)  # (B,G,Q,H)
+    cum = jnp.cumsum(la, axis=2)               # logA_t within chunk
+    total = cum[:, :, -1]                      # (B,G,H)
+
+    # Intra-chunk: score[t,s] = (c_t · b_s) · exp(logA_t − logA_s + log a_s…)
+    # recurrence h_t = a_t h_{t-1} + b_t x_t includes a_t *before* adding b_t x_t
+    # only for previous state; the s-th injection decays by ∏_{u=s+1..t} a_u
+    # = exp(cum_t − cum_s).
+    diff = cum[:, :, :, None, :] - cum[:, :, None, :, :]  # (B,G,Q,Q,H) t,s
+    tri = jnp.tril(jnp.ones((Q, Q), bool))[None, None, :, :, None]
+    # mask BEFORE exp: upper-triangle diffs are positive-large; exp(inf)·0
+    # in the where-gradient would poison the backward pass with NaNs
+    gate = jnp.exp(jnp.where(tri, diff, -jnp.inf))
+    dots = jnp.einsum("bgthn,bgshn->bgtsh", cf, bf)       # c_t · b_s
+    y_intra = jnp.einsum("bgtsh,bgshp->bgthp", dots * gate, xf)
+
+    # Chunk summaries: injected state  Σ_s exp(cum_end − cum_s) b_s ⊗ x_s
+    w = jnp.exp(total[:, :, None] - cum)                  # (B,G,Q,H)
+    h_in = jnp.einsum("bgqh,bgqhn,bgqhp->bghpn", w, bf, xf)
+
+    # Scan chunks: carry h (B,H,P,N)
+    h_init = (jnp.zeros((B, H, P, N), jnp.float32) if h0 is None
+              else h0.astype(jnp.float32))
+
+    def step(h, inp):
+        h_inj, tot = inp                                  # (B,H,P,N), (B,H)
+        h_out = h                                        # state BEFORE chunk
+        h = h * jnp.exp(tot)[..., None, None] + h_inj
+        return h, h_out
+
+    hs_in = (jnp.moveaxis(h_in, 1, 0), jnp.moveaxis(total, 1, 0))
+    n_chunks = h_in.shape[1]
+    h_final, h_starts = jax.lax.scan(step, h_init, hs_in,
+                                     unroll=_unroll(n_chunks))
+    h_starts = jnp.moveaxis(h_starts, 0, 1)               # (B,G,H,P,N)
+
+    # Inter-chunk: y_t += exp(cum_t) · (c_t · h_start)
+    y_inter = jnp.einsum("bgthn,bghpn->bgthp", cf, h_starts) * \
+        jnp.exp(cum)[..., None]
+    y = (y_intra + y_inter).reshape(B, Sp, H, P)[:, :S]
+    return y.astype(dt), h_final
+
+
+def mlstm_chunked(q: jax.Array, k: jax.Array, v: jax.Array, i_gate: jax.Array,
+                  f_gate: jax.Array, *, chunk: int = 256
+                  ) -> tuple[jax.Array, tuple[jax.Array, jax.Array, jax.Array]]:
+    """Chunked mLSTM forward (training path).
+
+    Maps the xLSTM matrix-memory cell onto two SSD scans sharing decays:
+      C_t = f̂ C_{t-1} + î k v’  → ssd(x=v, a=f̂, b=î·k, c=q)   (numerator)
+      n_t = f̂ n_{t-1} + î k    → ssd(x=1, …)                  (denominator)
+    Gates are stabilized per-sequence by the running max trick only at the
+    sequential reference; here exponential gates are tamed by log-sigmoid
+    forget decays (≤ 0 exponents) and a global input-gate max subtraction,
+    matching ``ref.mlstm_scan`` to f32 tolerance for bounded gate ranges.
+    """
+    B, S, H, P = q.shape
+    dt = q.dtype
+    scale = P ** -0.5
+    logf = jax.nn.log_sigmoid(f_gate.astype(jnp.float32))           # ≤ 0
+    li = i_gate.astype(jnp.float32)
+    m = jnp.maximum(jnp.max(li, axis=1, keepdims=True), 0.0)        # (B,1,H)
+    i_act = jnp.exp(li - m)
+    a = jnp.exp(logf)                                               # decay
+    kf = k.astype(jnp.float32) * scale
+    b = kf * i_act[..., None]
+    num, C = ssd_scan_chunked(v, a, b, q, chunk=chunk)              # (B,S,H,P)
+    ones = jnp.ones((B, S, H, 1), jnp.float32)
+    den, n = ssd_scan_chunked(ones, a, b, q, chunk=chunk)           # (B,S,H,1)
+    den = jnp.maximum(jnp.abs(den[..., 0]), jnp.exp(-m))            # un-scaled ≥ 1
+    y = num.astype(jnp.float32) / den[..., None]
+    m_out = jnp.broadcast_to(m[:, 0], (B, H))
+    return y.astype(dt), (C, n[:, :, 0, :], m_out)  # n state: (B,H,P=1,N)→(B,H,N)

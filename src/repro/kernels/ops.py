@@ -1,0 +1,71 @@
+"""Backend dispatch for the perf-critical ops.
+
+TPU  → Pallas kernels (``flash_attention.py``, ``decode_attention.py``,
+       ``ssm_scan.py``, ``rmsnorm.py``).
+CPU/other → jnp paths: ``ref.py`` oracles for attention/rmsnorm and the
+       chunked sub-quadratic scans in ``chunked.py`` for SSD/mLSTM.
+
+``REPRO_KERNELS`` env overrides: "xla" (force jnp), "pallas" (force Pallas,
+interpret=True off-TPU — used by kernel tests).
+"""
+
+from __future__ import annotations
+
+import functools
+import os
+
+import jax
+
+from . import chunked, ref
+
+
+@functools.cache
+def _mode() -> str:
+    env = os.environ.get("REPRO_KERNELS", "auto")
+    if env != "auto":
+        return env
+    return "pallas" if jax.default_backend() == "tpu" else "xla"
+
+
+def _interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+def attention(q, k, v, *, causal=True, window=None, scale=None, kv_offset=0):
+    if _mode() == "pallas":
+        from .flash_attention import flash_attention
+        return flash_attention(q, k, v, causal=causal, window=window,
+                               scale=scale, kv_offset=kv_offset,
+                               interpret=_interpret())
+    return ref.attention(q, k, v, causal=causal, window=window, scale=scale,
+                         kv_offset=kv_offset)
+
+
+def decode_attention(q, k_cache, v_cache, cache_len, *, window=None,
+                     scale=None):
+    if _mode() == "pallas":
+        from .decode_attention import decode_attention as da
+        return da(q, k_cache, v_cache, cache_len, window=window, scale=scale,
+                  interpret=_interpret())
+    return ref.decode_attention(q, k_cache, v_cache, cache_len, window=window,
+                                scale=scale)
+
+
+def rmsnorm(x, scale, eps=1e-5):
+    if _mode() == "pallas":
+        from .rmsnorm import rmsnorm as rn
+        return rn(x, scale, eps=eps, interpret=_interpret())
+    return ref.rmsnorm(x, scale, eps)
+
+
+def ssd_scan(x, a, b, c, h0=None, *, chunk=256):
+    if _mode() == "pallas":
+        from .ssm_scan import ssd_scan_pallas
+        return ssd_scan_pallas(x, a, b, c, h0=h0, chunk=chunk,
+                               interpret=_interpret())
+    return chunked.ssd_scan_chunked(x, a, b, c, h0=h0, chunk=chunk)
+
+
+def mlstm_scan(q, k, v, i_gate, f_gate, *, chunk=256):
+    # mLSTM rides on the SSD machinery in both backends (see chunked.py).
+    return chunked.mlstm_chunked(q, k, v, i_gate, f_gate, chunk=chunk)

@@ -1,0 +1,226 @@
+"""Pure-jnp oracles for every Pallas kernel (and the CPU execution path).
+
+These are the semantics of record: Pallas kernels are validated against these
+in ``tests/test_kernels_*.py`` (interpret=True on CPU), and the CPU backend
+dispatches here so smoke tests / examples run the same math.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+_NEG_INF = -1e30
+
+
+def _row_shard(qf: jax.Array, n_kv: int, group: int, seq_dim: int = 1):
+    """Sequence-parallel attention guard (§Perf iteration): when no head dim
+    divides the tensor-parallel axis, GSPMD shards the qk *contraction* and
+    ALL-REDUCES the full S×S logits (measured 43 GB/layer f32 on llama4
+    prefill).  Constraining q's row dim onto `model` makes the logits
+    row-sharded instead — zero attention collectives."""
+    from ..parallel.sharding import active_mesh, constrain
+    mesh, axes = active_mesh()
+    if mesh is None:
+        return qf
+    msize = mesh.shape[axes.model]
+    if n_kv % msize == 0 or group % msize == 0:
+        return qf  # head parallelism already available
+    # Row-sharding q forces k/v replication across `model`; only profitable
+    # when the k/v head volume is modest (refuted on MLA's 40 full heads —
+    # §Perf: minicpm3 regressed 2×, gate added).
+    d = qf.shape[-1]
+    if n_kv * d > 2048:  # MLA's 40×96 regressed 2×; musicgen's 24×64 wins
+        return qf
+    names: list[str | None] = [None] * qf.ndim
+    names[seq_dim] = "model"
+    return constrain(qf, tuple(names))
+
+
+def rmsnorm(x: jax.Array, scale: jax.Array, eps: float = 1e-5) -> jax.Array:
+    dt = x.dtype
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    return ((xf * jax.lax.rsqrt(var + eps)) * scale.astype(jnp.float32)).astype(dt)
+
+
+def attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
+              causal: bool = True, window: int | None = None,
+              scale: float | None = None,
+              kv_offset: int = 0) -> jax.Array:
+    """Full (flash-equivalent) attention with GQA head broadcast.
+
+    q: (B, Sq, Hq, D); k, v: (B, Skv, Hkv, D) with Hq % Hkv == 0.
+    ``kv_offset``: absolute position of q[0] minus position of k[0]
+    (prefill: 0 with Sq == Skv; decode: cache_len with Sq == 1).
+    window: sliding-window size (attend to positions in (i-window, i]).
+
+    Sliding-window inputs long enough to profit are routed to the banded
+    implementation (O(S·w) instead of O(S²) — §Perf iteration 1).
+    """
+    if (causal and window is not None and kv_offset == 0
+            and q.shape[1] == k.shape[1] and q.shape[1] > 2 * window):
+        return attention_banded(q, k, v, window=window, scale=scale)
+    B, Sq, Hq, D = q.shape
+    _, Skv, Hkv, _ = k.shape
+    g = Hq // Hkv
+    scale = scale if scale is not None else D ** -0.5
+    qf = q.astype(jnp.float32) * scale
+    kf = k.astype(jnp.float32)
+    vf = v.astype(jnp.float32)
+    qf = _row_shard(qf.reshape(B, Sq, Hkv, g, D), Hkv, g, seq_dim=1)
+    logits = jnp.einsum("bqhgd,bkhd->bhgqk", qf, kf)
+    q_pos = jnp.arange(Sq)[:, None] + kv_offset
+    k_pos = jnp.arange(Skv)[None, :]
+    mask = jnp.ones((Sq, Skv), bool)
+    if causal:
+        mask &= k_pos <= q_pos
+    if window is not None:
+        mask &= k_pos > q_pos - window
+    logits = jnp.where(mask[None, None, None], logits, _NEG_INF)
+    p = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bhgqk,bkhd->bqhgd", p, vf)
+    return out.reshape(B, Sq, Hq, v.shape[-1]).astype(q.dtype)
+
+
+def attention_banded(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                     window: int, scale: float | None = None) -> jax.Array:
+    """Exact causal sliding-window attention in O(S·window).
+
+    Chunks the sequence into window-sized blocks; each query block attends
+    to its own and the previous block only (the (q-window, q] band is fully
+    contained there).  Equals the masked full attention bit-for-bit on the
+    valid band — validated in tests against :func:`attention`.
+    """
+    B, S, Hq, D = q.shape
+    _, _, Hkv, _ = k.shape
+    g = Hq // Hkv
+    w = window
+    scale = scale if scale is not None else D ** -0.5
+    pad = (-S) % w
+    if pad:
+        zf = lambda t: jnp.pad(t, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        q, k, v = zf(q), zf(k), zf(v)
+    Sp = S + pad
+    nc = Sp // w
+    # NOTE: no _row_shard here — banded logits are O(S·w), and measurement
+    # showed the q/k/v re-shard costs more than it saves (§Perf, refuted).
+    qf = (q.astype(jnp.float32) * scale).reshape(B, nc, w, Hkv, g, D)
+    kc = k.astype(jnp.float32).reshape(B, nc, w, Hkv, D)
+    vc = v.astype(jnp.float32).reshape(B, nc, w, Hkv, D)
+    # band for chunk i: [chunk i-1 | chunk i]  (chunk -1 zero-padded)
+    prev = lambda t: jnp.concatenate(
+        [jnp.zeros_like(t[:, :1]), t[:, :-1]], axis=1)
+    kb = jnp.concatenate([prev(kc), kc], axis=2)        # (B, nc, 2w, Hkv, D)
+    vb = jnp.concatenate([prev(vc), vc], axis=2)
+    logits = jnp.einsum("bcqhgd,bckhd->bchgqk", qf, kb)  # (B,nc,Hkv,g,w,2w)
+    q_pos = jnp.arange(w)[:, None] + w                   # within-band coords
+    k_pos = jnp.arange(2 * w)[None, :]
+    first = jax.lax.broadcasted_iota(jnp.int32, (nc, 1, 1), 0) == 0
+    mask = (k_pos <= q_pos) & (k_pos > q_pos - w)
+    mask = mask[None] & ~(first & (k_pos < w))           # chunk 0 has no prev
+    logits = jnp.where(mask[:, None, None], logits, _NEG_INF)
+    p = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bchgqk,bckhd->bcqhgd", p, vb)
+    out = out.reshape(B, Sp, Hq, D)[:, :S]
+    return out.astype(q.dtype)
+
+
+def decode_attention(q: jax.Array, k_cache: jax.Array, v_cache: jax.Array,
+                     cache_len: jax.Array | int, *,
+                     window: int | None = None,
+                     scale: float | None = None) -> jax.Array:
+    """Single-token attention over a (possibly ring-buffered) KV cache.
+
+    q: (B, Hq, D); caches: (B, Smax, Hkv, D); cache_len: #valid entries
+    (scalar or (B,)).  With ``window``, the cache is a ring buffer of size
+    ``window`` — all *valid* slots participate (ring order does not matter
+    for softmax since positions are compared via validity only).
+    """
+    B, Hq, D = q.shape
+    _, Smax, Hkv, _ = k_cache.shape
+    g = Hq // Hkv
+    scale = scale if scale is not None else D ** -0.5
+    qf = (q.astype(jnp.float32) * scale).reshape(B, Hkv, g, D)
+    logits = jnp.einsum("bhgd,bkhd->bhgk", qf, k_cache.astype(jnp.float32))
+    lens = jnp.asarray(cache_len)
+    lens = jnp.broadcast_to(lens, (B,))
+    valid = jnp.arange(Smax)[None, :] < jnp.minimum(lens, Smax)[:, None]
+    logits = jnp.where(valid[:, None, None, :], logits, _NEG_INF)
+    p = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bhgk,bkhd->bhgd", p, v_cache.astype(jnp.float32))
+    return out.reshape(B, Hq, v_cache.shape[-1]).astype(q.dtype)
+
+
+def ssd_scan(x: jax.Array, a: jax.Array, b: jax.Array, c: jax.Array,
+             h0: jax.Array | None = None) -> tuple[jax.Array, jax.Array]:
+    """Reference selective-state-space scan (Mamba-2 SSD form), sequential.
+
+    Recurrence per head: h_t = a_t * h_{t-1} + b_t ⊗ x_t;  y_t = h_t @ c_t.
+      x: (B, S, H, P)   — inputs (P = head dim)
+      a: (B, S, H)      — scalar decay per head/step, in (0, 1)
+      b: (B, S, H, N)   — input projection onto state (N = d_state)
+      c: (B, S, H, N)   — output projection
+      h0: (B, H, P, N)  — initial state (zeros if None)
+    Returns y: (B, S, H, P) and final state (B, H, P, N).
+    """
+    B, S, H, P = x.shape
+    N = b.shape[-1]
+    dt = x.dtype
+    xf, af, bf, cf = (t.astype(jnp.float32) for t in (x, a, b, c))
+    h = jnp.zeros((B, H, P, N), jnp.float32) if h0 is None else h0.astype(jnp.float32)
+
+    def step(h, inp):
+        xt, at, bt, ct = inp  # (B,H,P), (B,H), (B,H,N), (B,H,N)
+        h = h * at[..., None, None] + xt[..., None] * bt[..., None, :]
+        y = jnp.einsum("bhpn,bhn->bhp", h, ct)
+        return h, y
+
+    xs = (jnp.moveaxis(xf, 1, 0), jnp.moveaxis(af, 1, 0),
+          jnp.moveaxis(bf, 1, 0), jnp.moveaxis(cf, 1, 0))
+    h, ys = jax.lax.scan(step, h, xs)
+    return jnp.moveaxis(ys, 0, 1).astype(dt), h
+
+
+def mlstm_scan(q: jax.Array, k: jax.Array, v: jax.Array, i_gate: jax.Array,
+               f_gate: jax.Array, c0: jax.Array | None = None,
+               n0: jax.Array | None = None, m0: jax.Array | None = None
+               ) -> tuple[jax.Array, tuple[jax.Array, jax.Array, jax.Array]]:
+    """Reference mLSTM (xLSTM matrix-memory cell), sequential & stabilized.
+
+    q,k,v: (B, S, H, P); i_gate,f_gate: (B, S, H) pre-activation log gates.
+    C_t = f C_{t-1} + i k vᵀ; n_t = f n_{t-1} + i k; y = Cᵀq / max(|nᵀq|,1)
+    with the m-state log-stabilizer of the xLSTM paper.
+    Returns y (B,S,H,P) and final (C, n, m).
+    """
+    B, S, H, P = q.shape
+    dt = q.dtype
+    qf, kf, vf = (t.astype(jnp.float32) for t in (q, k, v))
+    i_f = i_gate.astype(jnp.float32)
+    f_f = f_gate.astype(jnp.float32)
+    scale = P ** -0.5
+    C = jnp.zeros((B, H, P, P), jnp.float32) if c0 is None else c0.astype(jnp.float32)
+    n = jnp.zeros((B, H, P), jnp.float32) if n0 is None else n0.astype(jnp.float32)
+    m = jnp.full((B, H), -jnp.inf, jnp.float32) if m0 is None else m0.astype(jnp.float32)
+
+    def step(carry, inp):
+        C, n, m = carry
+        qt, kt, vt, it, ft = inp
+        logf = jax.nn.log_sigmoid(ft)
+        m_new = jnp.maximum(logf + m, it)
+        i_act = jnp.exp(it - m_new)
+        f_act = jnp.exp(logf + m - m_new)
+        kt = kt * scale
+        C = C * f_act[..., None, None] + i_act[..., None, None] * (
+            kt[..., :, None] * vt[..., None, :])
+        n = n * f_act[..., None] + i_act[..., None] * kt
+        num = jnp.einsum("bhpk,bhp->bhk", C, qt)
+        # clamp at exp(−m): equals 1.0 in unstabilized ("true") space
+        den = jnp.maximum(jnp.abs(jnp.einsum("bhp,bhp->bh", n, qt)),
+                          jnp.exp(-m_new))
+        y = num / den[..., None]
+        return (C, n, m_new), y
+
+    xs = tuple(jnp.moveaxis(t, 1, 0) for t in (qf, kf, vf, i_f, f_f))
+    (C, n, m), ys = jax.lax.scan(step, (C, n, m), xs)
+    return jnp.moveaxis(ys, 0, 1).astype(dt), (C, n, m)

@@ -1,0 +1,100 @@
+"""Chunked selective-scan (SSD) — Pallas TPU kernel.
+
+One grid step processes one (batch·head, chunk) tile entirely in VMEM:
+builds the chunk-local decay matrix G[t,s] = exp(cumlog a_t − cumlog a_s),
+computes the intra-chunk quadratic term ((C·Bᵀ)⊙G)·X on the MXU, applies
+the carried state h (inter-chunk term), and writes the updated state for
+the next chunk — the sequential chunk dependency is expressed by making
+the chunk index the innermost grid dim with the state in VMEM scratch
+(grid iterations on TPU are sequential per core, so the carry is legal;
+this is the TPU-idiomatic replacement for the CUDA kernel's cross-block
+semaphore chain).
+
+Oracle: ``ref.ssd_scan`` (sequential); the XLA path is
+``chunked.ssd_scan_chunked``.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def ssd_scan_pallas(x, a, b, c, h0=None, *, chunk=256, interpret=False):
+    """x: (B,S,H,P); a: (B,S,H) decay ∈ (0,1); b,c: (B,S,H,N).
+    Returns (y (B,S,H,P), h_final (B,H,P,N))."""
+    B, S, H, P = x.shape
+    N = b.shape[-1]
+    dt = x.dtype
+    Q = min(chunk, S)
+    pad = (Q - S % Q) % Q
+    if pad:
+        zf = lambda t: jnp.pad(t, [(0, 0), (0, pad)] + [(0, 0)] * (t.ndim - 2))
+        x, b, c = zf(x), zf(b), zf(c)
+        a = jnp.pad(a, [(0, 0), (0, pad), (0, 0)], constant_values=1.0)
+    Sp = S + pad
+    G = Sp // Q
+
+    # head-major fold: (B*H, S, ·)
+    xf = x.transpose(0, 2, 1, 3).reshape(B * H, Sp, P)
+    bf = b.transpose(0, 2, 1, 3).reshape(B * H, Sp, N)
+    cf = c.transpose(0, 2, 1, 3).reshape(B * H, Sp, N)
+    la = jnp.log(jnp.maximum(a.astype(jnp.float32), 1e-37))
+    laf = la.transpose(0, 2, 1).reshape(B * H, Sp)
+    h_init = (jnp.zeros((B * H, P, N), jnp.float32) if h0 is None
+              else h0.astype(jnp.float32).reshape(B * H, P, N))
+
+    def kernel(x_ref, b_ref, c_ref, la_ref, h0_ref, y_ref, hout_ref, h_ref):
+        gi = pl.program_id(1)
+
+        @pl.when(gi == 0)
+        def _init():
+            h_ref[...] = h0_ref[0]
+
+        xb = x_ref[0].astype(jnp.float32)            # (Q, P)
+        bb = b_ref[0].astype(jnp.float32)            # (Q, N)
+        cb = c_ref[0].astype(jnp.float32)
+        lab = la_ref[0].astype(jnp.float32)          # (Q,)
+        cum = jnp.cumsum(lab)                        # logA_t
+        diff = cum[:, None] - cum[None, :]           # (Q, Q) t,s
+        tri = jax.lax.broadcasted_iota(jnp.int32, diff.shape, 0) >= \
+            jax.lax.broadcasted_iota(jnp.int32, diff.shape, 1)
+        gate = jnp.where(tri, jnp.exp(diff), 0.0)
+        dots = cb @ bb.T                             # (Q, Q): c_t · b_s
+        y = (dots * gate) @ xb                       # intra-chunk (Q, P)
+        h = h_ref[...]                               # (P, N) carried state
+        y = y + jnp.exp(cum)[:, None] * (cb @ h.T)   # inter-chunk
+        y_ref[0] = y.astype(y_ref.dtype)
+        w = jnp.exp(cum[-1] - cum)                   # (Q,)
+        h_inj = xb.T @ (bb * w[:, None])             # (P, N)
+        h_ref[...] = h * jnp.exp(cum[-1]) + h_inj
+
+        @pl.when(gi == pl.num_programs(1) - 1)
+        def _final():
+            hout_ref[0] = h_ref[...]
+
+    y, h_final = pl.pallas_call(
+        kernel,
+        grid=(B * H, G),
+        in_specs=[
+            pl.BlockSpec((1, Q, P), lambda i, g: (i, g, 0)),
+            pl.BlockSpec((1, Q, N), lambda i, g: (i, g, 0)),
+            pl.BlockSpec((1, Q, N), lambda i, g: (i, g, 0)),
+            pl.BlockSpec((1, Q), lambda i, g: (i, g)),
+            pl.BlockSpec((1, P, N), lambda i, g: (i, 0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, Q, P), lambda i, g: (i, g, 0)),
+            pl.BlockSpec((1, P, N), lambda i, g: (i, 0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((B * H, Sp, P), dt),
+            jax.ShapeDtypeStruct((B * H, P, N), jnp.float32),
+        ],
+        scratch_shapes=[pltpu.VMEM((P, N), jnp.float32)],
+        interpret=interpret,
+    )(xf, bf, cf, laf, h_init)
+    y = y.reshape(B, H, Sp, P).transpose(0, 2, 1, 3)[:, :S]
+    return y.astype(dt), h_final.reshape(B, H, P, N)

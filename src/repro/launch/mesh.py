@@ -1,0 +1,33 @@
+"""Production meshes.  Functions only — importing this module never touches
+jax device state (the dry-run must set XLA_FLAGS before any jax init)."""
+
+from __future__ import annotations
+
+import numpy as np
+
+import jax
+from jax.sharding import Mesh
+
+from ..parallel.sharding import MeshAxes
+
+
+def make_production_mesh(*, multi_pod: bool = False) -> Mesh:
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    n = int(np.prod(shape))
+    devs = jax.devices()
+    if len(devs) < n:
+        raise RuntimeError(
+            f"mesh {shape} needs {n} devices, have {len(devs)} — run under "
+            "launch/dryrun.py (it forces 512 host devices) or on a real pod")
+    return Mesh(np.asarray(devs[:n]).reshape(shape), axes)
+
+
+def mesh_axes(mesh: Mesh) -> MeshAxes:
+    if "pod" in mesh.axis_names:
+        return MeshAxes(data=("pod", "data"), model="model")
+    return MeshAxes(data=("data",), model="model")
+
+
+def chips(mesh: Mesh) -> int:
+    return int(np.prod(list(mesh.shape.values())))

@@ -1,0 +1,51 @@
+"""Training launcher.
+
+Single-host CPU (default): runs the fault-tolerant loop on a reduced config.
+Production: `--dryrun` lowers the full config on the production mesh (see
+dryrun.py for the full sweep); on a real TPU pod the same code path runs with
+jax.distributed initialized by the cluster scheduler.
+
+    PYTHONPATH=src python -m repro.launch.train --arch yi_6b --steps 50
+"""
+
+from __future__ import annotations
+
+import argparse
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="internlm2_1p8b")
+    ap.add_argument("--steps", type=int, default=50)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--ckpt-dir", default="/tmp/repro_train")
+    ap.add_argument("--grad-compression", action="store_true")
+    ap.add_argument("--reduced", action="store_true", default=True,
+                    help="train the reduced config (CPU-sized)")
+    args = ap.parse_args()
+
+    import repro.configs as C
+    from repro.data import DataConfig
+    from repro.optim import AdamWConfig
+    from repro.runtime import TrainConfig, train_loop
+
+    cfg = C.get_config(args.arch)
+    if args.reduced:
+        cfg = cfg.reduced(n_layers=2, d_model=128, vocab=1024)
+    tcfg = TrainConfig(grad_compression=args.grad_compression,
+                       optimizer=AdamWConfig(total_steps=args.steps))
+    dcfg = DataConfig(vocab=cfg.vocab, seq_len=args.seq,
+                      global_batch=args.batch,
+                      embed_stub_dim=cfg.d_model if cfg.embed_stub else None)
+    lcfg = train_loop.LoopConfig(total_steps=args.steps,
+                                 ckpt_every=max(args.steps // 4, 1),
+                                 ckpt_dir=args.ckpt_dir)
+    out = train_loop.run_with_restarts(cfg, tcfg, lcfg, dcfg)
+    print(f"[train] arch={args.arch} steps={out['last_step'] + 1} "
+          f"loss {out['losses'][0]:.3f} -> {out['losses'][-1]:.3f} "
+          f"stragglers={out['straggler_events']}")
+
+
+if __name__ == "__main__":
+    main()

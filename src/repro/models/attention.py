@@ -1,0 +1,167 @@
+"""Attention variants: GQA (w/ optional sliding window) and MLA.
+
+Each variant exposes ``init(key, cfg) -> params``, ``apply(params, cfg, x,
+positions) -> (y, kv)`` for train/prefill, and ``decode(params, cfg, x,
+cache, pos) -> (y, new_cache_entry)`` for single-token serving.
+
+KV caches (per layer):
+  gqa/swa: (B, Smax, n_kv, hd) k and v — SWA uses Smax = window (ring buffer).
+  mla:     (B, Smax, kv_lora + rope_dim) latent (the MLA decode-memory win).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ModelConfig
+from ..kernels import ops
+from .common import dense_init, dtype_of, rmsnorm, rope
+
+
+# ---------------------------------------------------------------------------
+# GQA (covers full attention and sliding-window via cfg.window)
+# ---------------------------------------------------------------------------
+
+def gqa_init(key, cfg: ModelConfig) -> dict:
+    d, hq, hkv, hd = cfg.d_model, cfg.n_heads, cfg.n_kv, cfg.hd
+    dt = dtype_of(cfg.param_dtype)
+    k1, k2 = jax.random.split(key)
+    return {
+        "wqkv": dense_init(k1, d, (d, (hq + 2 * hkv) * hd), dt),
+        "wo": dense_init(k2, hq * hd, (hq * hd, d), dt),
+    }
+
+
+def _split_qkv(p, cfg: ModelConfig, x):
+    B, S, _ = x.shape
+    hq, hkv, hd = cfg.n_heads, cfg.n_kv, cfg.hd
+    qkv = x @ p["wqkv"]
+    q, k, v = jnp.split(qkv, [hq * hd, (hq + hkv) * hd], axis=-1)
+    return (q.reshape(B, S, hq, hd), k.reshape(B, S, hkv, hd),
+            v.reshape(B, S, hkv, hd))
+
+
+def gqa_apply(p: dict, cfg: ModelConfig, x: jax.Array,
+              positions: jax.Array) -> tuple[jax.Array, tuple]:
+    """Full-sequence attention (train / prefill).  Returns (y, (k, v))."""
+    B, S, _ = x.shape
+    q, k, v = _split_qkv(p, cfg, x)
+    q = rope(q, positions, cfg.rope_theta)
+    k = rope(k, positions, cfg.rope_theta)
+    window = cfg.window if cfg.attn == "swa" else None
+    y = ops.attention(q, k, v, causal=True, window=window)
+    y = y.reshape(B, S, cfg.n_heads * cfg.hd)
+    return y @ p["wo"], (k, v)
+
+
+def gqa_decode(p: dict, cfg: ModelConfig, x: jax.Array, cache: tuple,
+               pos: jax.Array) -> tuple[jax.Array, tuple]:
+    """x: (B, 1, d); cache: (k, v) each (B, Smax, hkv, hd); pos: scalar."""
+    B = x.shape[0]
+    k_cache, v_cache = cache
+    smax = k_cache.shape[1]
+    q, k, v = _split_qkv(p, cfg, x)
+    q = rope(q, pos[None], cfg.rope_theta)[:, 0]          # (B, hq, hd)
+    k = rope(k, pos[None], cfg.rope_theta)
+    slot = pos % smax if cfg.attn == "swa" else pos       # ring buffer for SWA
+    k_cache = jax.lax.dynamic_update_slice_in_dim(k_cache, k.astype(k_cache.dtype), slot, 1)
+    v_cache = jax.lax.dynamic_update_slice_in_dim(v_cache, v.astype(v_cache.dtype), slot, 1)
+    length = jnp.minimum(pos + 1, smax)
+    window = cfg.window if cfg.attn == "swa" else None
+    y = ops.decode_attention(q, k_cache, v_cache, length, window=window)
+    y = y.reshape(B, 1, cfg.n_heads * cfg.hd)
+    return y @ p["wo"], (k_cache, v_cache)
+
+
+def gqa_cache_shape(cfg: ModelConfig, batch: int, seq: int,
+                    dtype) -> tuple[jax.ShapeDtypeStruct, jax.ShapeDtypeStruct]:
+    smax = min(seq, cfg.window) if cfg.attn == "swa" and cfg.window else seq
+    s = jax.ShapeDtypeStruct((batch, smax, cfg.n_kv, cfg.hd), dtype)
+    return (s, s)
+
+
+# ---------------------------------------------------------------------------
+# MLA — multi-head latent attention (MiniCPM3 / DeepSeek-V2 style)
+# ---------------------------------------------------------------------------
+
+def mla_init(key, cfg: ModelConfig) -> dict:
+    m = cfg.mla
+    assert m is not None
+    d, hq = cfg.d_model, cfg.n_heads
+    qk = m.qk_nope_head_dim + m.qk_rope_head_dim
+    dt = dtype_of(cfg.param_dtype)
+    ks = jax.random.split(key, 6)
+    return {
+        "wq_a": dense_init(ks[0], d, (d, m.q_lora_rank), dt),
+        "wq_b": dense_init(ks[1], m.q_lora_rank, (m.q_lora_rank, hq * qk), dt),
+        "wkv_a": dense_init(ks[2], d, (d, m.kv_lora_rank + m.qk_rope_head_dim), dt),
+        "wkv_b": dense_init(ks[3], m.kv_lora_rank,
+                            (m.kv_lora_rank, hq * (m.qk_nope_head_dim + m.v_head_dim)), dt),
+        "wo": dense_init(ks[4], hq * m.v_head_dim, (hq * m.v_head_dim, d), dt),
+        "norm_q": {"scale": jnp.ones((m.q_lora_rank,), dt)},
+        "norm_kv": {"scale": jnp.ones((m.kv_lora_rank,), dt)},
+    }
+
+
+def _mla_qkv(p, cfg: ModelConfig, x, positions):
+    """Materialized q, k, v for full-sequence attention + the latent cache."""
+    m = cfg.mla
+    B, S, _ = x.shape
+    hq = cfg.n_heads
+    q = rmsnorm(x @ p["wq_a"], p["norm_q"]["scale"], cfg.norm_eps) @ p["wq_b"]
+    q = q.reshape(B, S, hq, m.qk_nope_head_dim + m.qk_rope_head_dim)
+    q_nope, q_rope = jnp.split(q, [m.qk_nope_head_dim], axis=-1)
+    q_rope = rope(q_rope, positions, cfg.rope_theta)
+
+    kv = x @ p["wkv_a"]
+    c_kv, k_rope = jnp.split(kv, [m.kv_lora_rank], axis=-1)
+    c_kv = rmsnorm(c_kv, p["norm_kv"]["scale"], cfg.norm_eps)
+    k_rope = rope(k_rope[:, :, None, :], positions, cfg.rope_theta)  # (B,S,1,r)
+    latent = jnp.concatenate([c_kv, k_rope[:, :, 0]], axis=-1)
+
+    kvb = (c_kv @ p["wkv_b"]).reshape(B, S, hq, m.qk_nope_head_dim + m.v_head_dim)
+    k_nope, v = jnp.split(kvb, [m.qk_nope_head_dim], axis=-1)
+    k = jnp.concatenate([k_nope, jnp.broadcast_to(k_rope, (B, S, hq, m.qk_rope_head_dim))], -1)
+    q = jnp.concatenate([q_nope, q_rope], axis=-1)
+    return q, k, v, latent
+
+
+def mla_apply(p: dict, cfg: ModelConfig, x: jax.Array,
+              positions: jax.Array) -> tuple[jax.Array, jax.Array]:
+    m = cfg.mla
+    B, S, _ = x.shape
+    q, k, v, latent = _mla_qkv(p, cfg, x, positions)
+    y = ops.attention(q, k, v, causal=True,
+                      scale=(m.qk_nope_head_dim + m.qk_rope_head_dim) ** -0.5)
+    y = y.reshape(B, S, cfg.n_heads * m.v_head_dim)
+    return y @ p["wo"], latent
+
+
+def mla_decode(p: dict, cfg: ModelConfig, x: jax.Array, cache: jax.Array,
+               pos: jax.Array) -> tuple[jax.Array, jax.Array]:
+    """Latent-cache decode: cache (B, Smax, kv_lora + rope) stores the
+    compressed KV; k/v are re-expanded from the latent each step (the MLA
+    memory/compute trade)."""
+    m = cfg.mla
+    B = x.shape[0]
+    q, k, v, latent = _mla_qkv(p, cfg, x, pos[None])
+    cache = jax.lax.dynamic_update_slice_in_dim(cache, latent.astype(cache.dtype), pos, 1)
+    c_kv, k_rope = jnp.split(cache, [m.kv_lora_rank], axis=-1)
+    kvb = (c_kv @ p["wkv_b"]).reshape(B, cache.shape[1], cfg.n_heads,
+                                      m.qk_nope_head_dim + m.v_head_dim)
+    k_nope, v_all = jnp.split(kvb, [m.qk_nope_head_dim], axis=-1)
+    k_all = jnp.concatenate(
+        [k_nope, jnp.broadcast_to(k_rope[:, :, None, :],
+                                  (*k_nope.shape[:3], m.qk_rope_head_dim))], -1)
+    y = ops.decode_attention(
+        q[:, 0], k_all, v_all, pos + 1,
+        scale=(m.qk_nope_head_dim + m.qk_rope_head_dim) ** -0.5)
+    y = y.reshape(B, 1, cfg.n_heads * m.v_head_dim)
+    return y @ p["wo"], cache
+
+
+def mla_cache_shape(cfg: ModelConfig, batch: int, seq: int, dtype):
+    m = cfg.mla
+    return jax.ShapeDtypeStruct((batch, seq, m.kv_lora_rank + m.qk_rope_head_dim),
+                                dtype)

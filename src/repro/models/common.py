@@ -1,0 +1,60 @@
+"""Shared building blocks: init helpers, RMSNorm, RoPE, SwiGLU MLP."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ModelConfig
+from ..kernels import ops
+
+
+def dtype_of(name: str):
+    return {"float32": jnp.float32, "bfloat16": jnp.bfloat16,
+            "float16": jnp.float16}[name]
+
+
+def dense_init(key, fan_in: int, shape: tuple[int, ...], dtype) -> jax.Array:
+    scale = fan_in ** -0.5
+    return (jax.random.normal(key, shape, jnp.float32) * scale).astype(dtype)
+
+
+def rmsnorm(x: jax.Array, scale: jax.Array, eps: float) -> jax.Array:
+    return ops.rmsnorm(x, scale, eps)
+
+
+def rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """Rotary embedding.  x: (..., S, H, D) with D even; positions: (S,) or
+    broadcastable to x's S dim."""
+    d = x.shape[-1]
+    half = d // 2
+    freqs = theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    ang = positions.astype(jnp.float32)[..., None] * freqs  # (S, half)
+    cos, sin = jnp.cos(ang), jnp.sin(ang)
+    # expand to (..., S, 1, half) to broadcast over heads
+    while cos.ndim < x.ndim - 1:
+        cos, sin = cos[None], sin[None]
+    cos, sin = cos[..., None, :], sin[..., None, :]
+    x1, x2 = x[..., :half], x[..., half:]
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# SwiGLU MLP
+# ---------------------------------------------------------------------------
+
+def mlp_init(key, cfg: ModelConfig, d_ff: int | None = None) -> dict:
+    d, f = cfg.d_model, d_ff if d_ff is not None else cfg.d_ff
+    dt = dtype_of(cfg.param_dtype)
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {
+        "w_in": dense_init(k1, d, (d, f), dt),
+        "w_gate": dense_init(k2, d, (d, f), dt),
+        "w_out": dense_init(k3, f, (f, d), dt),
+    }
+
+
+def mlp_apply(p: dict, x: jax.Array) -> jax.Array:
+    h = jax.nn.silu(x @ p["w_gate"]) * (x @ p["w_in"])
+    return h @ p["w_out"]

@@ -1,0 +1,110 @@
+"""Mamba-2-style selective SSM block (used by hymba's parallel-SSM head and
+as the generic ``mamba`` block kind).
+
+Per block: in-projections → short causal depthwise conv → SiLU → selective
+scan (chunked SSD, Pallas on TPU) → gated RMSNorm → out-projection.
+Decode carries (conv_state, ssm_state) instead of a KV cache — O(1) memory
+per step, which is what makes ``long_500k`` runnable for SSM/hybrid archs.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ModelConfig
+from ..kernels import ops
+from .common import dense_init, dtype_of, rmsnorm
+
+
+def _dims(cfg: ModelConfig) -> tuple[int, int, int, int]:
+    s = cfg.ssm
+    d_inner = s.expand * cfg.d_model
+    n_heads = max(1, d_inner // 64)          # P = 64 per SSM head
+    p = d_inner // n_heads
+    return d_inner, n_heads, p, s.d_state
+
+
+def ssm_init(key, cfg: ModelConfig) -> dict:
+    s = cfg.ssm
+    assert s is not None
+    d = cfg.d_model
+    d_inner, nh, p, n = _dims(cfg)
+    dt = dtype_of(cfg.param_dtype)
+    ks = jax.random.split(key, 6)
+    return {
+        "w_x": dense_init(ks[0], d, (d, d_inner), dt),
+        "w_z": dense_init(ks[1], d, (d, d_inner), dt),
+        "w_bc": dense_init(ks[2], d, (d, 2 * nh * n), dt),
+        "w_dt": dense_init(ks[3], d, (d, nh), dt),
+        "dt_bias": jnp.zeros((nh,), jnp.float32),
+        "A_log": jnp.log(jnp.linspace(1.0, 16.0, nh, dtype=jnp.float32)),
+        "D": jnp.ones((nh,), jnp.float32),
+        "conv": dense_init(ks[4], s.conv_kernel, (s.conv_kernel, d_inner), dt),
+        "norm": {"scale": jnp.ones((d_inner,), dt)},
+        "w_out": dense_init(ks[5], d_inner, (d_inner, d), dt),
+    }
+
+
+def _causal_conv(x: jax.Array, w: jax.Array,
+                 state: jax.Array | None = None) -> tuple[jax.Array, jax.Array]:
+    """Depthwise causal conv over time.  x: (B, S, D); w: (K, D).
+    state: (B, K-1, D) trailing context (decode).  Returns (y, new_state)."""
+    K = w.shape[0]
+    if state is None:
+        state = jnp.zeros((x.shape[0], K - 1, x.shape[2]), x.dtype)
+    xp = jnp.concatenate([state, x], axis=1)
+    y = sum(xp[:, i:i + x.shape[1]] * w[i] for i in range(K))
+    new_state = xp[:, -(K - 1):] if K > 1 else state
+    return y, new_state
+
+
+def _ssm_core(p: dict, cfg: ModelConfig, x: jax.Array,
+              conv_state: jax.Array | None, ssm_state: jax.Array | None
+              ) -> tuple[jax.Array, jax.Array, jax.Array]:
+    """Shared by train (states None) and decode (states carried)."""
+    B, S, d = x.shape
+    d_inner, nh, ph, n = _dims(cfg)
+    xs = x @ p["w_x"]
+    z = x @ p["w_z"]
+    xs, conv_state_new = _causal_conv(xs, p["conv"], conv_state)
+    xs = jax.nn.silu(xs)
+
+    bc = (x @ p["w_bc"]).reshape(B, S, nh, 2 * n)
+    b, c = jnp.split(bc, 2, axis=-1)
+    dt_ = jax.nn.softplus((x @ p["w_dt"]).astype(jnp.float32)
+                          + p["dt_bias"])                     # (B, S, nh)
+    a = jnp.exp(-dt_ * jnp.exp(p["A_log"]))                   # decay ∈ (0,1)
+    xh = xs.reshape(B, S, nh, ph)
+    b = b * dt_[..., None]                                    # dt-weighted input
+    y, ssm_state_new = ops.ssd_scan(xh, a, b, c, h0=ssm_state,
+                                    chunk=cfg.ssm.chunk)
+    y = y + xh * p["D"][None, None, :, None].astype(y.dtype)
+    y = y.reshape(B, S, d_inner)
+    y = rmsnorm(y, p["norm"]["scale"], cfg.norm_eps) * jax.nn.silu(z)
+    return y @ p["w_out"], conv_state_new, ssm_state_new
+
+
+def ssm_apply(p: dict, cfg: ModelConfig, x: jax.Array) -> jax.Array:
+    y, _, _ = _ssm_core(p, cfg, x, None, None)
+    return y
+
+
+def ssm_prefill(p: dict, cfg: ModelConfig, x: jax.Array) -> tuple[jax.Array, tuple]:
+    """Returns (y, (conv_state, ssm_state)) so decode can continue."""
+    y, cs, hs = _ssm_core(p, cfg, x, None, None)
+    return y, (cs, hs)
+
+
+def ssm_decode(p: dict, cfg: ModelConfig, x: jax.Array, cache: tuple,
+               pos: jax.Array) -> tuple[jax.Array, tuple]:
+    conv_state, ssm_state = cache
+    y, cs, hs = _ssm_core(p, cfg, x, conv_state, ssm_state)
+    return y, (cs, hs)
+
+
+def ssm_cache_shape(cfg: ModelConfig, batch: int, dtype):
+    s = cfg.ssm
+    d_inner, nh, ph, n = _dims(cfg)
+    return (jax.ShapeDtypeStruct((batch, s.conv_kernel - 1, d_inner), dtype),
+            jax.ShapeDtypeStruct((batch, nh, ph, n), jnp.float32))

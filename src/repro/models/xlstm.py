@@ -1,0 +1,187 @@
+"""xLSTM blocks: mLSTM (matrix memory, chunk-parallel) and sLSTM (scalar
+memory, strictly recurrent) — arXiv:2405.04517, adapted per DESIGN.md.
+
+xlstm-1.3b uses a 7:1 mLSTM:sLSTM pattern (period 8), d_ff = 0 (the blocks
+embed their own up/down projections, no separate FFN).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ModelConfig
+from ..kernels import ops, ref
+from .common import dense_init, dtype_of, rmsnorm
+
+
+def _mlstm_dims(cfg: ModelConfig) -> tuple[int, int, int]:
+    d_inner = 2 * cfg.d_model
+    nh = cfg.n_heads
+    return d_inner, nh, d_inner // nh
+
+
+def mlstm_init(key, cfg: ModelConfig) -> dict:
+    d = cfg.d_model
+    d_inner, nh, p = _mlstm_dims(cfg)
+    dt = dtype_of(cfg.param_dtype)
+    ks = jax.random.split(key, 5)
+    return {
+        "w_up": dense_init(ks[0], d, (d, 2 * d_inner), dt),      # [x | z]
+        "conv": dense_init(ks[1], 4, (4, d_inner), dt),
+        "w_qkv": dense_init(ks[2], d_inner, (d_inner, 3 * d_inner), dt),
+        "w_gates": dense_init(ks[3], d_inner, (d_inner, 2 * nh), dt),
+        "gate_bias": jnp.concatenate([jnp.zeros((nh,)), 3.0 * jnp.ones((nh,))]
+                                     ).astype(jnp.float32),      # [i | f]
+        "norm": {"scale": jnp.ones((d_inner,), dt)},
+        "w_out": dense_init(ks[4], d_inner, (d_inner, d), dt),
+    }
+
+
+def _mlstm_core(p, cfg, x, cache):
+    from .ssm import _causal_conv
+    B, S, d = x.shape
+    d_inner, nh, ph = _mlstm_dims(cfg)
+    conv_state = cache[0] if cache is not None else None
+    up = x @ p["w_up"]
+    xs, z = jnp.split(up, 2, axis=-1)
+    xc, conv_state_new = _causal_conv(xs, p["conv"], conv_state)
+    xc = jax.nn.silu(xc)
+    qkv = xc @ p["w_qkv"]
+    q, k, v = (t.reshape(B, S, nh, ph) for t in jnp.split(qkv, 3, -1))
+    gates = (xc @ p["w_gates"]).astype(jnp.float32) + p["gate_bias"]
+    i_gate, f_gate = jnp.split(gates, 2, axis=-1)                 # (B,S,nh)
+    if cache is None:
+        y, _ = ops.mlstm_scan(q, k, v, i_gate, f_gate, chunk=cfg.ssm.chunk
+                              if cfg.ssm else 256)
+        state_new = None
+    else:
+        _, C, n, m = cache
+        y, (C, n, m) = ref.mlstm_scan(q, k, v, i_gate, f_gate, C, n, m)
+        state_new = (C, n, m)
+    y = y.reshape(B, S, d_inner)
+    y = rmsnorm(y, p["norm"]["scale"], cfg.norm_eps) * jax.nn.silu(z)
+    return y @ p["w_out"], conv_state_new, state_new
+
+
+def mlstm_apply(p: dict, cfg: ModelConfig, x: jax.Array) -> jax.Array:
+    y, _, _ = _mlstm_core(p, cfg, x, None)
+    return y
+
+
+def mlstm_prefill(p: dict, cfg: ModelConfig, x: jax.Array
+                  ) -> tuple[jax.Array, dict]:
+    """Chunked forward + state handover for decode continuation.
+
+    The chunked cell returns (C, n) scaled by exp(−m_global) with m_global
+    the sequence-max input gate — the same invariant (state = true·exp(−m))
+    the sequential ref maintains with its running max, so decode can carry
+    on directly after transposing C to the ref (k-dim, v-dim) layout."""
+    from .ssm import _causal_conv
+    B, S, d = x.shape
+    d_inner, nh, ph = _mlstm_dims(cfg)
+    up = x @ p["w_up"]
+    xs, z = jnp.split(up, 2, axis=-1)
+    xc, conv_state = _causal_conv(xs, p["conv"], None)
+    xc = jax.nn.silu(xc)
+    qkv = xc @ p["w_qkv"]
+    q, k, v = (t.reshape(B, S, nh, ph) for t in jnp.split(qkv, 3, -1))
+    gates = (xc @ p["w_gates"]).astype(jnp.float32) + p["gate_bias"]
+    i_gate, f_gate = jnp.split(gates, 2, axis=-1)
+    y, (C, n, m) = ops.mlstm_scan(q, k, v, i_gate, f_gate,
+                                  chunk=cfg.ssm.chunk if cfg.ssm else 256)
+    y = y.reshape(B, S, d_inner)
+    y = rmsnorm(y, p["norm"]["scale"], cfg.norm_eps) * jax.nn.silu(z)
+    cache = {"conv": conv_state, "C": jnp.swapaxes(C, -1, -2),
+             "n": n, "m": m}
+    return y @ p["w_out"], cache
+
+
+def mlstm_decode(p: dict, cfg: ModelConfig, x: jax.Array, cache: tuple,
+                 pos: jax.Array) -> tuple[jax.Array, tuple]:
+    y, cs, (C, n, m) = _mlstm_core(p, cfg, x, cache)
+    return y, (cs, C, n, m)
+
+
+def mlstm_cache_shape(cfg: ModelConfig, batch: int, dtype):
+    d_inner, nh, p = _mlstm_dims(cfg)
+    return (jax.ShapeDtypeStruct((batch, 3, d_inner), dtype),          # conv
+            jax.ShapeDtypeStruct((batch, nh, p, p), jnp.float32),      # C
+            jax.ShapeDtypeStruct((batch, nh, p), jnp.float32),         # n
+            jax.ShapeDtypeStruct((batch, nh), jnp.float32))            # m
+
+
+# ---------------------------------------------------------------------------
+# sLSTM — scalar-memory cell with exponential gating (sequential over time)
+# ---------------------------------------------------------------------------
+
+def slstm_init(key, cfg: ModelConfig) -> dict:
+    d = cfg.d_model
+    nh = cfg.n_heads
+    p = d // nh
+    dt = dtype_of(cfg.param_dtype)
+    ks = jax.random.split(key, 3)
+    return {
+        "w": dense_init(ks[0], d, (d, 4 * d), dt),       # i f z o pre-acts
+        "r": dense_init(ks[1], p, (nh, p, 4 * p), dt),   # block-diag recurrent
+        "bias": jnp.concatenate([jnp.zeros((d,)), 3.0 * jnp.ones((d,)),
+                                 jnp.zeros((2 * d,))]).astype(jnp.float32),
+        "norm": {"scale": jnp.ones((d,), dt)},
+        "w_out": dense_init(ks[2], d, (d, d), dt),
+    }
+
+
+def _slstm_step(p, cfg, carry, wx_t):
+    """One timestep.  carry: (h, c, n, m) each (B, nh, ph) f32.
+    wx_t: (B, 4d) input pre-activations for this step."""
+    h, c, n, m = carry
+    B = h.shape[0]
+    nh, ph = h.shape[1], h.shape[2]
+    rh = jnp.einsum("bhp,hpq->bhq", h.astype(p["r"].dtype), p["r"])   # (B,nh,4ph)
+    pre = wx_t.reshape(B, nh, 4 * ph).astype(jnp.float32) + rh.astype(jnp.float32)
+    i_, f_, z_, o_ = jnp.split(pre, 4, axis=-1)
+    logf = jax.nn.log_sigmoid(f_)
+    m_new = jnp.maximum(logf + m, i_)
+    i_act = jnp.exp(i_ - m_new)
+    f_act = jnp.exp(logf + m - m_new)
+    c_new = f_act * c + i_act * jnp.tanh(z_)
+    n_new = f_act * n + i_act
+    h_new = jax.nn.sigmoid(o_) * c_new / jnp.maximum(n_new, 1.0)
+    return (h_new, c_new, n_new, m_new)
+
+
+def _slstm_core(p, cfg, x, state):
+    B, S, d = x.shape
+    nh = cfg.n_heads
+    ph = d // nh
+    wx = (x @ p["w"]).astype(jnp.float32) + p["bias"]                 # (B,S,4d)
+    if state is None:
+        z = jnp.zeros((B, nh, ph), jnp.float32)
+        state = (z, z, z, jnp.full((B, nh, ph), -1e30, jnp.float32))
+
+    def step(carry, wx_t):
+        new = _slstm_step(p, cfg, carry, wx_t)
+        return new, new[0]
+
+    state_new, hs = jax.lax.scan(step, state, jnp.moveaxis(wx, 1, 0))
+    y = jnp.moveaxis(hs, 0, 1).reshape(B, S, d).astype(x.dtype)
+    y = rmsnorm(y, p["norm"]["scale"], cfg.norm_eps)
+    return y @ p["w_out"], state_new
+
+
+def slstm_apply(p: dict, cfg: ModelConfig, x: jax.Array) -> jax.Array:
+    y, _ = _slstm_core(p, cfg, x, None)
+    return y
+
+
+def slstm_decode(p: dict, cfg: ModelConfig, x: jax.Array, cache: tuple,
+                 pos: jax.Array) -> tuple[jax.Array, tuple]:
+    y, state = _slstm_core(p, cfg, x, cache)
+    return y, state
+
+
+def slstm_cache_shape(cfg: ModelConfig, batch: int, dtype):
+    nh = cfg.n_heads
+    ph = cfg.d_model // nh
+    s = jax.ShapeDtypeStruct((batch, nh, ph), jnp.float32)
+    return (s, s, s, s)

@@ -1,0 +1,5 @@
+from . import compression
+from .adamw import AdamWConfig, global_norm, init, schedule, update
+
+__all__ = ["AdamWConfig", "compression", "global_norm", "init", "schedule",
+           "update"]

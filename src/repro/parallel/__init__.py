@@ -1,0 +1,5 @@
+from .sharding import (MeshAxes, active_mesh, batch_spec, cache_pspec,
+                       param_pspecs, set_active_mesh, with_dp_constraint)
+
+__all__ = ["MeshAxes", "active_mesh", "batch_spec", "cache_pspec",
+           "param_pspecs", "set_active_mesh", "with_dp_constraint"]

@@ -1,0 +1,91 @@
+"""GPipe-style pipeline executor over a ``stage`` mesh axis (shard_map +
+ppermute), with stage boundaries supplied by OULD placement.
+
+The paper's placement runs layer ranges on different nodes and ships the
+boundary activation over the best link; this is the same execution shape on
+a TPU mesh: stage-stacked weights live on their stage's devices, microbatch
+activations flow stage→stage via ``ppermute`` (the TPU-idiomatic point-to-
+point the paper's U2U transfer maps onto — DESIGN.md §2).
+
+Schedule: standard GPipe fill/drain — T = n_micro + n_stages − 1 ticks; at
+each tick every stage runs one microbatch (bubble ticks run on zeros and
+their outputs are discarded by the validity mask).  Uniform stages (equal
+layer counts) keep the scan body static; OULD feeds this executor whenever
+its stage cuts are uniform, and falls back to per-request placed execution
+otherwise (runtime/serve.py path).
+"""
+
+from __future__ import annotations
+
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+from jax.experimental.shard_map import shard_map
+from jax.sharding import Mesh, PartitionSpec as P
+
+
+def pipeline_forward(block_fn: Callable, params_stacked, x, *, mesh: Mesh,
+                     stage_axis: str = "stage", n_micro: int | None = None):
+    """Run ``block_fn(params_slice, x_micro)`` as an S-stage pipeline.
+
+    params_stacked: pytree with leading dim L (layers), L % n_stages == 0 —
+    each stage executes its contiguous L/S slice per tick.
+    x: (B, ...) global batch, B % n_micro == 0.
+    Returns block-stack output equivalent to sequentially applying all L
+    layers (validated in tests against the sequential reference).
+    """
+    n_stages = mesh.shape[stage_axis]
+    B = x.shape[0]
+    n_micro = n_micro or n_stages
+    assert B % n_micro == 0
+    mb = B // n_micro
+    L = jax.tree.leaves(params_stacked)[0].shape[0]
+    assert L % n_stages == 0
+    per_stage = L // n_stages
+
+    def stage_fn(p_local, x_all):
+        """p_local: params slice (per_stage, ...); x_all: (B, ...) full batch
+        (replicated); runs the fill/drain schedule for THIS stage."""
+        sid = jax.lax.axis_index(stage_axis)
+        micro = x_all.reshape(n_micro, mb, *x_all.shape[1:])
+        T = n_micro + n_stages - 1
+
+        def run_block(x_in):
+            def body(h, p_slice):
+                return block_fn(p_slice, h), None
+            h, _ = jax.lax.scan(body, x_in, p_local)
+            return h
+
+        def tick(carry, t):
+            buf, out = carry          # buf: (mb, ...) inbound activation
+            m_idx = t - sid           # microbatch this stage works on
+            valid = (m_idx >= 0) & (m_idx < n_micro)
+            x_in = jnp.where(
+                sid == 0,
+                micro[jnp.clip(m_idx, 0, n_micro - 1)],
+                buf)
+            y = run_block(x_in)
+            # last stage banks its result; others forward downstream
+            out = jax.lax.cond(
+                valid & (sid == n_stages - 1),
+                lambda o: o.at[jnp.clip(m_idx, 0, n_micro - 1)].set(y),
+                lambda o: o, out)
+            nxt = jax.lax.ppermute(
+                y, stage_axis,
+                [(i, (i + 1) % n_stages) for i in range(n_stages)])
+            return (nxt, out), None
+
+        out0 = jnp.zeros_like(micro)
+        buf0 = jnp.zeros_like(micro[0])
+        (_, out), _ = jax.lax.scan(tick, (buf0, out0), jnp.arange(T))
+        # only the last stage holds real outputs; psum-broadcast them
+        out = jax.lax.psum(
+            jnp.where(sid == n_stages - 1, out, jnp.zeros_like(out)),
+            stage_axis)
+        return out.reshape(B, *x_all.shape[1:])
+
+    fn = shard_map(stage_fn, mesh=mesh,
+                   in_specs=(P(stage_axis), P()),
+                   out_specs=P(), check_rep=False)
+    return fn(params_stacked, x)

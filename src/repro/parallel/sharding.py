@@ -1,0 +1,194 @@
+"""GSPMD sharding rules: name-pattern → PartitionSpec with divisibility guards.
+
+Strategy (DESIGN.md §4): 2-D "fsdp × tensor".  Parameters shard their
+feature dims on the ``model`` axis (TP / EP) and, for FSDP, a second dim on
+``data`` (+ ``pod`` when the multi-pod mesh is active and the arch is large).
+Every rule is *validated against the actual dim sizes* — any mesh axis that
+does not divide its dim is dropped (GSPMD would error otherwise), so the same
+rule table serves all 10 architectures.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Any
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+
+@dataclasses.dataclass(frozen=True)
+class MeshAxes:
+    """Logical axis-name bundles for the active mesh."""
+    data: tuple[str, ...] = ("data",)   # ("pod","data") on the multi-pod mesh
+    model: str = "model"
+
+    @property
+    def dp(self) -> tuple[str, ...]:
+        return self.data
+
+
+# Pattern table: (regex on param path, spec builder).  Specs are expressed per
+# *unstacked* dims; a leading layer-stack dim (from scan-stacked blocks) is
+# detected by the caller and padded with None.
+#   d = d_model-like dim → FSDP ('data'), f = feature/out dim → TP ('model'),
+#   E = expert dim → EP ('model').
+_RULES: list[tuple[str, list[str | None]]] = [
+    (r"embed/table$",          ["model", "data"]),   # (V, d)
+    (r"lm_head$",              ["data", "model"]),   # (d, V)
+    (r"(attn|mla)/(wq|wk|wv|wqkv|wkv|wq_a|wq_b|wkv_a|wkv_b)$",
+                               ["data", "model"]),
+    (r"(attn|mla)/wo$",        ["model", "data"]),
+    (r"mlp/(w_in|w_gate)$",    ["data", "model"]),   # (d, f)
+    (r"mlp/w_out$",            ["model", "data"]),   # (f, d)
+    (r"moe/router$",           ["data", None]),      # (d, E)
+    (r"moe/(w_in|w_gate)$",    ["model", "data", None]),  # (E, d, f) — EP
+    (r"moe/w_out$",            ["model", None, "data"]),  # (E, f, d)
+    (r"(ssm|mlstm)/(w_x|w_z|w_bc|w_dt|w_qkv|w_up|w_gates)$",
+                               ["data", "model"]),
+    (r"(ssm|mlstm|slstm)/w_out$", ["model", "data"]),
+    (r"slstm/w$",              ["data", "model"]),
+    (r"slstm/r$",              [None, None, None]),
+    (r"conv$",                 [None, None]),
+    (r"norm\w*/scale$",        [None]),
+    (r"bias$",                 [None]),
+    (r"(A_log|dt_bias|D)$",    [None]),
+]
+
+
+def _axis_size(mesh: Mesh, name: str | None, axes: MeshAxes) -> int:
+    if name is None:
+        return 1
+    if name == "data":
+        s = 1
+        for a in axes.dp:
+            s *= mesh.shape[a]
+        return s
+    return mesh.shape[axes.model]
+
+
+def _to_spec(names: list[str | None], shape: tuple[int, ...], mesh: Mesh,
+             axes: MeshAxes, fsdp: bool) -> P:
+    """Map logical names to mesh axes, dropping non-dividing ones."""
+    out: list[Any] = []
+    offset = len(shape) - len(names)
+    assert offset >= 0, (names, shape)
+    out.extend([None] * offset)  # leading stacked-layer dims: replicated
+    for k, nm in enumerate(names):
+        dim = shape[offset + k]
+        if nm == "data_model":  # shard over every axis (data ∪ model)
+            full = tuple(axes.dp) + (axes.model,)
+            size = 1
+            for a in full:
+                size *= mesh.shape[a]
+            out.append(full if dim % size == 0 else None)
+        elif nm == "model":
+            out.append(axes.model if dim % mesh.shape[axes.model] == 0 else None)
+        elif nm == "data":
+            if not fsdp:
+                out.append(None)
+                continue
+            size = _axis_size(mesh, "data", axes)
+            if dim % size == 0:
+                out.append(axes.dp if len(axes.dp) > 1 else axes.dp[0])
+            elif dim % mesh.shape[axes.dp[-1]] == 0:
+                out.append(axes.dp[-1])  # shard on intra-pod data only
+            else:
+                out.append(None)
+        else:
+            out.append(None)
+    # GSPMD forbids using one mesh axis twice in a spec; drop later dup.
+    seen: set[str] = set()
+    clean: list[Any] = []
+    for s in out:
+        flat = s if isinstance(s, tuple) else ((s,) if s else ())
+        if any(a in seen for a in flat):
+            clean.append(None)
+        else:
+            seen.update(flat)
+            clean.append(s)
+    return P(*clean)
+
+
+def param_pspecs(params: Any, mesh: Mesh, axes: MeshAxes | None = None,
+                 *, fsdp: bool = True) -> Any:
+    """PartitionSpec pytree mirroring ``params`` (dict-of-dict with leaf
+    ndarrays / ShapeDtypeStructs)."""
+    axes = axes or MeshAxes()
+
+    def visit(path: str, node: Any) -> Any:
+        if isinstance(node, dict):
+            return {k: visit(f"{path}/{k}" if path else k, v)
+                    for k, v in node.items()}
+        if isinstance(node, (list, tuple)):
+            out = [visit(path, v) for v in node]
+            return type(node)(out) if isinstance(node, tuple) else out
+        shape = node.shape
+        for pat, names in _RULES:
+            if re.search(pat, path):
+                return _to_spec(list(names), shape, mesh, axes, fsdp)
+        # default: try FSDP on the largest dim if it divides
+        if len(shape) >= 2:
+            names = [None] * len(shape)
+            big = max(range(len(shape)), key=lambda i: shape[i])
+            specs: list[str | None] = [None] * len(shape)
+            specs[big] = "model" if shape[big] % mesh.shape[axes.model] == 0 else None
+            return _to_spec(specs, shape, mesh, axes, fsdp)
+        return P()
+
+    return visit("", params)
+
+
+def batch_spec(axes: MeshAxes | None = None, *, batch_divisible: bool = True,
+               ndim: int = 2) -> P:
+    """Inputs (B, S, ...) — batch over (pod, data) when divisible."""
+    axes = axes or MeshAxes()
+    b = (axes.dp if len(axes.dp) > 1 else axes.dp[0]) if batch_divisible else None
+    return P(b, *([None] * (ndim - 1)))
+
+
+def cache_pspec(n_kv: int, batch: int, mesh: Mesh,
+                axes: MeshAxes | None = None) -> P:
+    """KV cache (L, B, S, n_kv, hd): batch→data when divisible, kv-heads→model
+    when divisible, else sequence→model (decode context parallelism)."""
+    axes = axes or MeshAxes()
+    dsize = _axis_size(mesh, "data", axes)
+    b = (axes.dp if len(axes.dp) > 1 else axes.dp[0]) if batch % dsize == 0 else None
+    if n_kv % mesh.shape[axes.model] == 0:
+        return P(None, b, None, axes.model, None)
+    return P(None, b, axes.model, None, None)
+
+
+# --- active mesh context (set by the launcher; absent on single-device) ----
+_ACTIVE: dict[str, Any] = {"mesh": None, "axes": MeshAxes()}
+
+
+def set_active_mesh(mesh: Mesh | None, axes: MeshAxes | None = None) -> None:
+    _ACTIVE["mesh"] = mesh
+    _ACTIVE["axes"] = axes or MeshAxes()
+
+
+def active_mesh() -> tuple[Mesh | None, MeshAxes]:
+    return _ACTIVE["mesh"], _ACTIVE["axes"]
+
+
+def constrain(x: jax.Array, names: tuple[str | None, ...]) -> jax.Array:
+    """Constrain by logical names ('data'/'model'/None per dim) with
+    divisibility guards.  No-op when no production mesh is active."""
+    mesh, axes = active_mesh()
+    if mesh is None:
+        return x
+    spec = _to_spec(list(names), x.shape, mesh, axes, fsdp=True)
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))
+
+
+def with_dp_constraint(x: jax.Array, batch_divisible: bool = True) -> jax.Array:
+    """Constrain an activation (B, S, d) to batch-sharded over DP axes.
+    No-op when no production mesh is active (smoke tests, CPU)."""
+    mesh, axes = active_mesh()
+    if mesh is None:
+        return x
+    b = (axes.dp if len(axes.dp) > 1 else axes.dp[0]) if batch_divisible else None
+    spec = P(b, *([None] * (x.ndim - 1)))
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))

@@ -1,0 +1,68 @@
+"""jit-able step functions: train / prefill / decode.
+
+These are the units the launcher jits (with shardings) and the dry-run
+lowers.  Pure functions of (params, opt_state, batch) — donation and
+sharding are applied at the jit boundary in ``launch/``.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ModelConfig
+from ..models import transformer
+from ..optim import adamw
+from ..optim import compression as comp
+
+
+@dataclasses.dataclass(frozen=True)
+class TrainConfig:
+    optimizer: adamw.AdamWConfig = adamw.AdamWConfig()
+    remat: bool = True
+    grad_compression: bool = False   # int8 EF compression (cross-pod traffic)
+
+
+def make_train_step(cfg: ModelConfig, tcfg: TrainConfig):
+    def train_step(params: Any, opt_state: dict, batch: dict
+                   ) -> tuple[Any, dict, dict]:
+        def loss_of(p):
+            return transformer.loss_fn(p, cfg, batch, remat=tcfg.remat)
+
+        (loss, metrics), grads = jax.value_and_grad(loss_of, has_aux=True)(params)
+        if tcfg.grad_compression:
+            grads, new_err = comp.compress_with_feedback(
+                grads, opt_state["comp_error"])
+        new_params, new_opt, opt_metrics = adamw.update(
+            tcfg.optimizer, grads, opt_state, params)
+        if tcfg.grad_compression:
+            new_opt["comp_error"] = new_err
+        return new_params, new_opt, {**metrics, **opt_metrics}
+
+    return train_step
+
+
+def init_opt_state(params: Any, tcfg: TrainConfig) -> dict:
+    state = adamw.init(params)
+    if tcfg.grad_compression:
+        state["comp_error"] = comp.init_error(params)
+    return state
+
+
+def make_prefill_step(cfg: ModelConfig, max_len: int | None = None):
+    def prefill_step(params: Any, batch: dict) -> tuple[jax.Array, list]:
+        return transformer.prefill(params, cfg, batch, max_len=max_len)
+
+    return prefill_step
+
+
+def make_decode_step(cfg: ModelConfig):
+    def decode_step(params: Any, tokens: jax.Array, cache: list,
+                    pos: jax.Array) -> tuple[jax.Array, list]:
+        return transformer.decode_step(params, cfg, tokens, cache, pos)
+
+    return decode_step

@@ -1,0 +1,129 @@
+"""Pallas kernels vs ref.py oracles: shape/dtype sweeps in interpret mode."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import chunked, ref
+from repro.kernels.decode_attention import decode_attention
+from repro.kernels.flash_attention import flash_attention
+from repro.kernels.rmsnorm import rmsnorm
+from repro.kernels.ssm_scan import ssd_scan_pallas
+
+KEY = jax.random.PRNGKey(0)
+
+
+def tol(dtype):
+    return dict(rtol=2e-2, atol=2e-2) if dtype == jnp.bfloat16 else \
+        dict(rtol=3e-5, atol=3e-5)
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("B,Sq,Skv,Hq,Hkv,D,causal,window,off", [
+    (2, 128, 128, 4, 2, 64, True, None, 0),
+    (1, 100, 100, 3, 1, 32, True, None, 0),
+    (2, 64, 192, 4, 4, 64, True, None, 128),
+    (1, 256, 256, 8, 2, 64, True, 64, 0),
+    (2, 128, 128, 4, 2, 64, False, None, 0),
+    (1, 64, 64, 2, 2, 128, True, None, 0),
+])
+def test_flash_attention(B, Sq, Skv, Hq, Hkv, D, causal, window, off, dtype):
+    ks = jax.random.split(KEY, 3)
+    q = jax.random.normal(ks[0], (B, Sq, Hq, D), dtype)
+    k = jax.random.normal(ks[1], (B, Skv, Hkv, D), dtype)
+    v = jax.random.normal(ks[2], (B, Skv, Hkv, D), dtype)
+    o_ref = ref.attention(q, k, v, causal=causal, window=window,
+                          kv_offset=off)
+    o_pal = flash_attention(q, k, v, causal=causal, window=window,
+                            kv_offset=off, block_q=32, block_k=32,
+                            interpret=True)
+    np.testing.assert_allclose(np.asarray(o_pal, np.float32),
+                               np.asarray(o_ref, np.float32), **tol(dtype))
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("B,Smax,Hq,Hkv,D,ln", [
+    (2, 256, 4, 2, 64, 100), (3, 100, 6, 6, 32, 100),
+    (2, 512, 8, 2, 128, 511), (1, 64, 4, 1, 64, 64),
+])
+def test_decode_attention(B, Smax, Hq, Hkv, D, ln, dtype):
+    ks = jax.random.split(KEY, 3)
+    q = jax.random.normal(ks[0], (B, Hq, D), dtype)
+    kc = jax.random.normal(ks[1], (B, Smax, Hkv, D), dtype)
+    vc = jax.random.normal(ks[2], (B, Smax, Hkv, D), dtype)
+    o_ref = ref.decode_attention(q, kc, vc, ln)
+    o_pal = decode_attention(q, kc, vc, ln, block_k=64, interpret=True)
+    np.testing.assert_allclose(np.asarray(o_pal, np.float32),
+                               np.asarray(o_ref, np.float32), **tol(dtype))
+
+
+def test_decode_attention_per_seq_lengths():
+    ks = jax.random.split(KEY, 3)
+    q = jax.random.normal(ks[0], (3, 4, 32))
+    kc = jax.random.normal(ks[1], (3, 128, 2, 32))
+    vc = jax.random.normal(ks[2], (3, 128, 2, 32))
+    lens = jnp.array([5, 77, 128], jnp.int32)
+    o_ref = ref.decode_attention(q, kc, vc, lens)
+    o_pal = decode_attention(q, kc, vc, lens, block_k=32, interpret=True)
+    np.testing.assert_allclose(np.asarray(o_pal), np.asarray(o_ref),
+                               rtol=3e-5, atol=3e-5)
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("shape", [(4, 37, 256), (2, 8, 64), (1, 1, 512)])
+def test_rmsnorm(shape, dtype):
+    x = jax.random.normal(KEY, shape, dtype)
+    s = jax.random.normal(jax.random.PRNGKey(1), (shape[-1],)) * 0.1 + 1
+    o_ref = ref.rmsnorm(x, s)
+    o_pal = rmsnorm(x, s, block_rows=16, interpret=True)
+    np.testing.assert_allclose(np.asarray(o_pal, np.float32),
+                               np.asarray(o_ref, np.float32), **tol(dtype))
+
+
+@pytest.mark.parametrize("chunk", [16, 32, 40, 96])
+@pytest.mark.parametrize("B,S,H,P,N", [(2, 96, 3, 16, 8), (1, 64, 1, 8, 4)])
+def test_ssd_pallas(B, S, H, P, N, chunk):
+    ks = jax.random.split(KEY, 5)
+    x = jax.random.normal(ks[0], (B, S, H, P))
+    a = jax.nn.sigmoid(jax.random.normal(ks[1], (B, S, H)) + 2.0)
+    b = jax.random.normal(ks[2], (B, S, H, N)) * 0.3
+    c = jax.random.normal(ks[3], (B, S, H, N)) * 0.3
+    h0 = jax.random.normal(ks[4], (B, H, P, N)) * 0.2
+    y_ref, h_ref = ref.ssd_scan(x, a, b, c, h0)
+    y_pal, h_pal = ssd_scan_pallas(x, a, b, c, h0, chunk=chunk,
+                                   interpret=True)
+    np.testing.assert_allclose(np.asarray(y_pal), np.asarray(y_ref),
+                               rtol=5e-5, atol=5e-5)
+    np.testing.assert_allclose(np.asarray(h_pal), np.asarray(h_ref),
+                               rtol=5e-5, atol=5e-5)
+
+
+@pytest.mark.parametrize("chunk", [7, 16, 48, 64])
+def test_ssd_chunked_xla(chunk):
+    ks = jax.random.split(KEY, 4)
+    B, S, H, P, N = 2, 48, 3, 8, 4
+    x = jax.random.normal(ks[0], (B, S, H, P))
+    a = jax.nn.sigmoid(jax.random.normal(ks[1], (B, S, H)) * 0.5 + 2.0)
+    b = jax.random.normal(ks[2], (B, S, H, N)) * 0.3
+    c = jax.random.normal(ks[3], (B, S, H, N)) * 0.3
+    y0, h0f = ref.ssd_scan(x, a, b, c)
+    y1, h1f = chunked.ssd_scan_chunked(x, a, b, c, chunk=chunk)
+    np.testing.assert_allclose(np.asarray(y0), np.asarray(y1), rtol=2e-5,
+                               atol=2e-5)
+    np.testing.assert_allclose(np.asarray(h0f), np.asarray(h1f), rtol=2e-5,
+                               atol=2e-5)
+
+
+def test_mlstm_chunked_matches_sequential():
+    ks = jax.random.split(KEY, 5)
+    B, S, H, P = 2, 64, 3, 8
+    q = jax.random.normal(ks[0], (B, S, H, P))
+    k = jax.random.normal(ks[1], (B, S, H, P))
+    v = jax.random.normal(ks[2], (B, S, H, P))
+    ig = jax.random.normal(ks[3], (B, S, H)) * 0.5
+    fg = jax.random.normal(ks[4], (B, S, H)) * 0.5 + 3.0
+    y0, _ = ref.mlstm_scan(q, k, v, ig, fg)
+    y1, _ = chunked.mlstm_chunked(q, k, v, ig, fg, chunk=16)
+    np.testing.assert_allclose(np.asarray(y0), np.asarray(y1), rtol=1e-4,
+                               atol=1e-4)

@@ -1,0 +1,138 @@
+"""OULD / OULD-MP optimization: optimality, constraints, admission."""
+
+import itertools
+
+import numpy as np
+import pytest
+
+from repro.core import (Problem, RPGMobility, RPGParams, evaluate,
+                        rate_matrix, solve_heuristic, solve_ould)
+from repro.core.profiles import LayerProfile, ModelProfile
+
+
+def toy_profile(m=4, mem=10.0, comp=5.0):
+    outs = [8.0, 4.0, 2.0, 1.0, 1.0, 1.0][:m]
+    layers = tuple(LayerProfile(f"l{j}", mem, comp, outs[j]) for j in range(m))
+    return ModelProfile("toy", layers, input_bytes=16.0)
+
+
+def toy_problem(n=3, r=2, mem_cap=30.0, seed=0, m=4):
+    rng = np.random.default_rng(seed)
+    pos = rng.uniform(0, 80, (n, 3))
+    pos[:, 2] = 50.0
+    return Problem(toy_profile(m), np.full(n, mem_cap), np.full(n, 1e9),
+                   rate_matrix(pos), np.arange(r) % n)
+
+
+def brute_force(prob):
+    spb = prob.transfer_cost()
+    K = prob.profile.output_vector()
+    mem = prob.profile.memory_vector()
+    N, M, R = prob.n_nodes, prob.n_layers, prob.n_requests
+    best = np.inf
+    for a in itertools.product(range(N), repeat=R * M):
+        a = np.array(a).reshape(R, M)
+        load = np.zeros(N)
+        for r in range(R):
+            for j in range(M):
+                load[a[r, j]] += mem[j]
+        if (load > prob.mem_cap + 1e-9).any():
+            continue
+        cost = 0.0
+        for r in range(R):
+            src = int(prob.sources[r])
+            if a[r, 0] != src:
+                cost += prob.profile.input_bytes * spb[src, a[r, 0]]
+            for j in range(M - 1):
+                if a[r, j + 1] != a[r, j]:
+                    cost += K[j] * spb[a[r, j], a[r, j + 1]]
+        best = min(best, cost)
+    return best
+
+
+def test_ilp_matches_bruteforce():
+    prob = toy_problem()
+    sol = solve_ould(prob)
+    assert sol.status == "optimal"
+    assert sol.objective == pytest.approx(brute_force(prob), rel=1e-6)
+
+
+def test_gamma_relaxation_exact():
+    """γ continuous in [0,1] must not change the optimum (big-M argument)."""
+    for seed in range(3):
+        prob = toy_problem(seed=seed)
+        a = solve_ould(prob, gamma_relaxed=True).objective
+        b = solve_ould(prob, gamma_relaxed=False).objective
+        assert a == pytest.approx(b, rel=1e-9)
+
+
+def test_tight_constraints_equivalent():
+    prob = toy_problem(seed=1)
+    a = solve_ould(prob, tight=True).objective
+    b = solve_ould(prob, tight=False).objective
+    assert a == pytest.approx(b, rel=1e-9)
+
+
+def test_capacity_constraints_respected():
+    prob = toy_problem(n=4, r=3, mem_cap=25.0)
+    sol = solve_ould(prob)
+    ev = evaluate(prob, sol)
+    assert ev.feasible
+
+
+def test_admission_sheds_when_over_capacity():
+    # 2 requests × 4 layers × 10B > 3 nodes × 20B ⇒ at most 1 admitted
+    prob = toy_problem(n=3, r=2, mem_cap=20.0)
+    sol = solve_ould(prob)
+    assert sol.status.startswith("rejected")
+    assert sol.n_admitted == 1
+    assert evaluate(prob, sol).feasible
+
+
+def test_dp_optimal_when_capacity_slack():
+    prob = toy_problem(n=3, r=1, mem_cap=1e9)
+    ilp = solve_ould(prob)
+    dp = solve_ould(prob, solver="dp")
+    assert dp.objective == pytest.approx(ilp.objective, rel=1e-6)
+
+
+def test_heuristics_feasible_and_dominated():
+    prob = toy_problem(n=4, r=3, mem_cap=25.0, seed=2)
+    opt = solve_ould(prob)
+    for kind in ("nearest", "hrm", "nearest_hrm"):
+        sol = solve_heuristic(prob, kind)
+        ev = evaluate(prob, sol)
+        assert ev.feasible
+        if sol.n_admitted == opt.n_admitted == prob.n_requests:
+            assert evaluate(prob, opt).comm_latency_s <= ev.comm_latency_s + 1e-9
+
+
+def test_exactly_one_constraint():
+    prob = toy_problem()
+    sol = solve_ould(prob)
+    # every admitted request has every layer on exactly one node (assign is
+    # a function) and the path starts from a real node id
+    assert sol.assign.shape == (prob.n_requests, prob.n_layers)
+    assert (sol.assign >= 0).all() and (sol.assign < prob.n_nodes).all()
+
+
+def test_ould_mp_avoids_predicted_disconnection():
+    """A pair that disconnects mid-horizon must not carry any transfer."""
+    prof = toy_profile(m=2, mem=10.0)
+    # node 2 drifts out of range at t=1; OULD-MP must not route via node 2
+    rates = np.full((2, 3, 3), 1e8)
+    for t in range(2):
+        np.fill_diagonal(rates[t], np.inf)
+    rates[1, 0, 2] = rates[1, 2, 0] = 0.0
+    rates[1, 1, 2] = rates[1, 2, 1] = 0.0
+    prob = Problem(prof, np.full(3, 10.0), np.full(3, 1e9), rates,
+                   np.zeros(1, np.int64))
+    sol = solve_ould(prob)
+    assert 2 not in sol.assign[0]
+
+
+def test_mobility_rates_deterministic():
+    mob = RPGMobility(RPGParams(n_uavs=5), seed=42)
+    a = mob.predicted_rates(3, seed=7)
+    b = RPGMobility(RPGParams(n_uavs=5), seed=42).predicted_rates(3, seed=7)
+    np.testing.assert_allclose(a, b)

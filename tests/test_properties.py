@@ -1,0 +1,99 @@
+"""Hypothesis property tests on system invariants."""
+
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (Problem, evaluate, rate_matrix, solve_ould,
+                        to_stages)
+from repro.core.profiles import LayerProfile, ModelProfile
+from repro.core.radio import RadioParams, sinr_matrix
+from repro.optim import compression as comp
+
+
+def _profile(mems, comps, outs):
+    layers = tuple(LayerProfile(f"l{j}", m, c, o)
+                   for j, (m, c, o) in enumerate(zip(mems, comps, outs)))
+    return ModelProfile("prop", layers, input_bytes=max(outs) * 2)
+
+
+@st.composite
+def problems(draw):
+    n = draw(st.integers(2, 5))
+    m = draw(st.integers(2, 5))
+    r = draw(st.integers(1, 3))
+    mems = draw(st.lists(st.floats(1.0, 20.0), min_size=m, max_size=m))
+    outs = draw(st.lists(st.floats(0.5, 32.0), min_size=m, max_size=m))
+    cap = draw(st.floats(30.0, 200.0))
+    seed = draw(st.integers(0, 100))
+    rng = np.random.default_rng(seed)
+    pos = rng.uniform(0, 120, (n, 3))
+    pos[:, 2] = 50.0
+    prob = Problem(_profile(mems, [1.0] * m, outs), np.full(n, cap),
+                   np.full(n, 1e9), rate_matrix(pos),
+                   rng.integers(0, n, r).astype(np.int64))
+    return prob
+
+
+@settings(max_examples=25, deadline=None)
+@given(problems())
+def test_dp_solution_always_feasible(prob):
+    sol = solve_ould(prob, solver="dp")
+    ev = evaluate(prob, sol)
+    assert ev.feasible
+    # objective consistency: evaluator agrees with the solver's objective
+    if sol.n_admitted == prob.n_requests:
+        assert abs(ev.comm_latency_s - sol.objective) <= 1e-6 * max(
+            1.0, abs(sol.objective))
+
+
+@settings(max_examples=15, deadline=None)
+@given(problems())
+def test_ilp_not_worse_than_dp(prob):
+    ilp = solve_ould(prob, mip_rel_gap=1e-6)
+    dp = solve_ould(prob, solver="dp")
+    if ilp.n_admitted == dp.n_admitted == prob.n_requests:
+        assert ilp.objective <= dp.objective + 1e-6
+
+
+@settings(max_examples=25, deadline=None)
+@given(problems())
+def test_stage_decomposition_roundtrip(prob):
+    sol = solve_ould(prob, solver="dp")
+    for r in range(prob.n_requests):
+        if not sol.admitted[r]:
+            continue
+        stages = to_stages(sol.assign[r])
+        # stages are contiguous, ordered, and cover all layers exactly once
+        assert stages[0].layer_start == 0
+        assert stages[-1].layer_end == prob.n_layers
+        for a, b in zip(stages, stages[1:]):
+            assert a.layer_end == b.layer_start
+            assert a.node != b.node
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.integers(2, 8), st.integers(0, 1000))
+def test_sinr_symmetric_positive(n, seed):
+    rng = np.random.default_rng(seed)
+    pos = rng.uniform(0, 200, (n, 3))
+    s = sinr_matrix(pos, RadioParams())
+    assert (s >= 0).all()
+    assert np.allclose(np.diag(s), 0.0)
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.lists(st.floats(-1e3, 1e3), min_size=1, max_size=64),
+       st.integers(0, 5))
+def test_compression_error_feedback_bounded(vals, rounds):
+    """EF invariants: deq + e_new == g + e_prev exactly, and the residual is
+    bounded by one quant step of the round's target."""
+    g = {"w": np.asarray(vals, np.float32)}
+    e = comp.init_error(g)
+    for _ in range(rounds + 1):
+        target = np.asarray(g["w"]) + np.asarray(e["w"])
+        deq, e = comp.compress_with_feedback(g, e)
+        np.testing.assert_allclose(
+            np.asarray(deq["w"]) + np.asarray(e["w"]), target,
+            rtol=1e-5, atol=1e-4)
+        step = max(np.abs(target).max() / 127.0, 1e-9)
+        assert np.abs(np.asarray(e["w"])).max() <= step + 1e-6
