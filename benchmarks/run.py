@@ -1,6 +1,9 @@
 """Benchmark entry point — one module per paper table/figure.
 
-    PYTHONPATH=src python -m benchmarks.run [--only ould,mp,...]
+    PYTHONPATH=src python -m benchmarks.run [--only ould,mp,...] [--quick]
+
+``--quick`` runs a <60 s CPU smoke subset (make-free CI path): each selected
+module's ``run(csv, quick=True)`` when it accepts the flag.
 
 Prints ``name,us_per_call,derived`` CSV rows (collected via common.Csv) and
 writes benchmarks/artifacts/results.json.
@@ -9,6 +12,7 @@ writes benchmarks/artifacts/results.json.
 from __future__ import annotations
 
 import argparse
+import inspect
 import json
 import pathlib
 import sys
@@ -17,24 +21,32 @@ sys.path.insert(0, str(pathlib.Path(__file__).resolve().parents[1] / "src"))
 
 from .common import Csv  # noqa: E402
 
-MODULES = ["profiles", "ould", "heuristics", "mp", "runtime",
+MODULES = ["profiles", "ould", "heuristics", "mp", "swarm", "runtime",
            "tpu_placement", "roofline"]
+QUICK_MODULES = ["profiles", "swarm"]
 
 
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default=None,
                     help="comma-separated subset of: " + ",".join(MODULES))
+    ap.add_argument("--quick", action="store_true",
+                    help="<60s CPU smoke subset (" + ",".join(QUICK_MODULES)
+                         + " by default)")
     args = ap.parse_args()
-    todo = args.only.split(",") if args.only else MODULES
+    default = QUICK_MODULES if args.quick else MODULES
+    todo = args.only.split(",") if args.only else default
 
     csv = Csv()
     print("name,us_per_call,derived")
     results: dict = {}
     for name in todo:
-        mod = __import__(f"benchmarks.bench_{name}", fromlist=["run"])
         try:
-            results[name] = mod.run(csv)
+            mod = __import__(f"benchmarks.bench_{name}", fromlist=["run"])
+            kw = {}
+            if args.quick and "quick" in inspect.signature(mod.run).parameters:
+                kw["quick"] = True
+            results[name] = mod.run(csv, **kw)
         except Exception as e:  # noqa: BLE001 — keep the suite going
             csv.add(f"{name}/ERROR", 0.0, f"{type(e).__name__}: {e}")
             results[name] = {"error": str(e)}

@@ -35,6 +35,9 @@ def main() -> None:
     print(f"OULD serving placement: admitted {ev.n_admitted}/6, "
           f"comm latency {ev.comm_latency_s * 1e6:.1f}us total")
     for r in range(3):
+        if not sol.admitted[r]:
+            print(f"  request {r} rejected")
+            continue
         route = "->".join(str(s.node) for s in to_stages(sol.assign[r]))
         print(f"  request {r} route: [{route}]")
 

@@ -24,6 +24,7 @@ from repro.core import (Problem, evaluate, lenet_profile, solve_ould,
 from repro.core.mobility import RPGMobility, RPGParams
 from repro.core.radio import RadioParams, rate_matrix
 from repro.models import cnn
+from repro.runtime.swarm import SwarmScenario, simulate
 
 MB = 1e6
 
@@ -86,6 +87,18 @@ def main() -> None:
                        mip_rel_gap=1e-3, time_limit=20.0)
     lat = [f"{e.avg_latency_per_request:.3f}" for e in mp.per_step]
     print(f"OULD-MP one-shot plan, per-step latency over horizon: {lat}")
+
+    # Streaming scenario: Poisson request arrivals on a two-group swarm whose
+    # inter-group links fade in and out of range, plus node churn — epoch
+    # re-placement with warm-started incremental OULD re-solves.
+    scn = SwarmScenario(arrival_rate_hz=0.3, duration_ticks=90,
+                        mtbf_s=60.0, mttr_s=20.0)
+    for policy in ("ould", "ould_mp", "nearest"):
+        r = simulate(scn, policy, seed=0)
+        print(f"swarm[{policy:8s}]: deadline_miss={r.deadline_miss_rate:.3f} "
+              f"rejected={r.rejection_rate:.3f} "
+              f"avg_latency={r.avg_latency_s:.3f}s "
+              f"resolve_total={r.total_resolve_s * 1e3:.1f}ms")
     print("uav_surveillance OK")
 
 

@@ -4,10 +4,12 @@ system-model substrates (per-layer profiles, radio link model, RPG
 mobility) and the heuristic baselines it is evaluated against.
 """
 
+from .events import ChurnEvent, Event, EventKind, EventQueue, churn_events, poisson_process
 from .heuristics import solve_heuristic
 from .latency import Evaluation, evaluate
-from .mobility import RPGMobility, RPGParams
-from .ould import Problem, Solution, solve_ould
+from .mobility import MultiGroupMobility, RPGMobility, RPGParams
+from .ould import (IncrementalSolver, Problem, ResolveStats, Solution,
+                   solve_ould)
 from .ould_mp import (MPResult, solve_offline_fixed, solve_ould_mp,
                       solve_static_resolve)
 from .placement import (Stage, balanced_stages, ould_pipeline_stages,
@@ -17,10 +19,13 @@ from .profiles import (LayerProfile, ModelProfile, lenet_profile, lm_profile,
 from .radio import RadioParams, TpuLinkModel, rate_matrix, sinr_matrix
 
 __all__ = [
-    "Evaluation", "LayerProfile", "MPResult", "ModelProfile", "Problem",
-    "RPGMobility", "RPGParams", "RadioParams", "Solution", "Stage",
-    "TpuLinkModel", "balanced_stages", "evaluate", "lenet_profile",
-    "lm_profile", "ould_pipeline_stages", "rate_matrix", "sinr_matrix",
-    "solve_heuristic", "solve_offline_fixed", "solve_ould", "solve_ould_mp",
-    "solve_static_resolve", "stage_boundaries", "to_stages", "vgg16_profile",
+    "ChurnEvent", "Evaluation", "Event", "EventKind", "EventQueue",
+    "IncrementalSolver", "LayerProfile", "MPResult", "ModelProfile",
+    "MultiGroupMobility", "Problem", "RPGMobility", "RPGParams",
+    "RadioParams", "ResolveStats", "Solution", "Stage", "TpuLinkModel",
+    "balanced_stages", "churn_events", "evaluate", "lenet_profile",
+    "lm_profile", "ould_pipeline_stages", "poisson_process", "rate_matrix",
+    "sinr_matrix", "solve_heuristic", "solve_offline_fixed", "solve_ould",
+    "solve_ould_mp", "solve_static_resolve", "stage_boundaries", "to_stages",
+    "vgg16_profile",
 ]

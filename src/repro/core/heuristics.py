@@ -68,7 +68,9 @@ def solve_heuristic(prob: Problem, kind: Heuristic) -> Solution:
     comp_left = prob.comp_cap.astype(float).copy()
     pick = _PICKERS[kind]
 
-    assign = np.zeros((R, M), np.int64)
+    # Rejected rows keep the -1 sentinel: a rejected request must never be
+    # mistaken for "all layers on node 0" (evaluate() enforces this).
+    assign = np.full((R, M), -1, np.int64)
     admitted = np.ones(R, bool)
     total = 0.0
     for r in range(R):

@@ -57,8 +57,12 @@ def evaluate(prob: Problem, sol: Solution) -> Evaluation:
     per_req = np.full(R, np.inf)
     for r in range(R):
         if not sol.admitted[r]:
+            # Non-admitted rows are never read: they carry the -1 sentinel.
             continue
         path = sol.assign[r]
+        assert (path >= 0).all() and (path < N).all(), \
+            f"request {r} marked admitted but its row holds the rejection " \
+            f"sentinel / an invalid node id: {path}"
         src = int(prob.sources[r])
         comm = 0.0
         cmp_ = 0.0

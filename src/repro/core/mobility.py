@@ -81,3 +81,67 @@ class RPGMobility:
         """(T, N, N) ρ_{i,k}(t) for OULD-MP (Eq. 14) — bits/s."""
         pos = self.positions(num_steps, seed=seed)
         return np.stack([rate_matrix(pos[t], radio) for t in range(pos.shape[0])])
+
+
+class MultiGroupMobility:
+    """Several RPG groups sweeping the area on independent leader paths.
+
+    The single-group model keeps every pair within twice the liberty radius,
+    so links never cross ``max_range`` and mobility alone cannot disconnect
+    them.  Real surveillance swarms (§III-C, citing [40]) fly as *multiple*
+    reference-point groups; inter-group distances then swing across the whole
+    area and links predictably fade in and out of range — exactly the
+    disconnection dynamics OULD-MP's horizon objective prices out (Fig. 13).
+
+    Groups share the planned-trajectory determinism of :class:`RPGMobility`;
+    group g's leader sweep is phase-shifted and direction-alternated so
+    groups periodically converge (cheap cross-group offload) and diverge
+    (links beyond ``max_range`` ⇒ ρ = 0).
+    """
+
+    def __init__(self, params: RPGParams, n_groups: int = 2, seed: int = 0):
+        if params.n_uavs % n_groups:
+            raise ValueError(f"{params.n_uavs} UAVs not divisible into "
+                             f"{n_groups} groups")
+        self.p = params
+        self.n_groups = n_groups
+        per = params.n_uavs // n_groups
+        self.group_of = np.repeat(np.arange(n_groups), per)
+        self._groups = []
+        for g in range(n_groups):
+            gp = dataclasses.replace(params, n_uavs=per)
+            self._groups.append(RPGMobility(gp, seed=seed * 7919 + g))
+        # Opposite-corner sweeps: even groups run SW→NE, odd groups NW→SE,
+        # so group pairs meet mid-area and separate toward opposite corners.
+        for g, mob in enumerate(self._groups):
+            lo = params.member_radius_m
+            hi = params.area_m - params.member_radius_m
+            if g % 2 == 1:
+                mob._start = np.array([lo, hi])
+                mob._end = np.array([hi, lo])
+
+    @property
+    def n_uavs(self) -> int:
+        return self.p.n_uavs
+
+    def positions(self, num_steps: int, seed: int | None = None,
+                  t0: int = 0) -> np.ndarray:
+        """(T, N, 3) planned positions for t = t0..t0+T-1.  ``t0`` lets the
+        simulator window the one planned trajectory instead of replaying from
+        mission start each epoch."""
+        out = np.zeros((num_steps, self.p.n_uavs, 3))
+        per = self.p.n_uavs // self.n_groups
+        for g, mob in enumerate(self._groups):
+            gseed = (seed * 104729 + g) if seed is not None else None
+            # Window the group's trajectory: generate t0+T steps then slice —
+            # keeps the jittered member offsets deterministic in t0.
+            pos = mob.positions(t0 + num_steps, seed=gseed)
+            out[:, g * per:(g + 1) * per] = pos[t0:]
+        return out
+
+    def predicted_rates(self, num_steps: int, radio: RadioParams | None = None,
+                        seed: int | None = None, t0: int = 0) -> np.ndarray:
+        """(T, N, N) ρ_{i,k}(t) — inter-group pairs hit ρ = 0 when their
+        groups separate beyond ``max_range`` (the OULD-MP scenario class)."""
+        pos = self.positions(num_steps, seed=seed, t0=t0)
+        return np.stack([rate_matrix(pos[t], radio) for t in range(pos.shape[0])])

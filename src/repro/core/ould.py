@@ -134,33 +134,46 @@ class _Index:
         return self.n_alpha + (r * (self.M - 1) + j) * len(self.pairs) + q
 
 
-def _build_ilp(prob: Problem, *, include_compute: bool, tight: bool):
-    R, N, M = prob.n_requests, prob.n_nodes, prob.n_layers
-    idx = _Index(R, N, M)
-    spb = prob.transfer_cost()          # (N,N) seconds/byte over horizon
-    K = prob.profile.output_vector()    # K_j bytes
+def _build_objective(prob: Problem, idx: "_Index", *,
+                     include_compute: bool,
+                     spb: np.ndarray | None = None) -> np.ndarray:
+    """Rate-dependent objective coefficients (Eq. 12 + 13), vectorized.
+
+    This is the ONLY part of the ILP that depends on the rate matrix, so
+    epoch re-solves rebuild just this vector and reuse the cached sparse
+    constraint matrix (see :class:`IncrementalSolver`)."""
+    R, N, M = idx.R, idx.N, idx.M
+    if spb is None:
+        spb = prob.transfer_cost()      # (N,N) seconds/byte over horizon
+    K = np.asarray(prob.profile.output_vector())    # K_j bytes
     Ks = prob.profile.input_bytes
-    mem = prob.profile.memory_vector()
-    comp = prob.profile.compute_vector()
+    comp = np.asarray(prob.profile.compute_vector())
 
     c = np.zeros(idx.n_vars)
+    ca = c[: idx.n_alpha].reshape(R, N, M)          # view
     # Source term t_s (Eq. 13): linear in α_{r,k,1}.
     for r in range(R):
         src = int(prob.sources[r])
-        for k in range(N):
-            if k != src:
-                c[idx.a(r, k, 0)] += Ks * spb[src, k]
+        ca[r, :, 0] = Ks * spb[src, :]
+        ca[r, src, 0] = 0.0
     # Inter-layer transfers (Eq. 12): γ_{r,i,k,j} · K_j / ρ_{i,k}.
-    for r in range(R):
-        for j in range(M - 1):
-            for (i, k) in idx.pairs:
-                c[idx.g(r, j, i, k)] += K[j] * spb[i, k]
+    pi = np.fromiter((p[0] for p in idx.pairs), np.int64, len(idx.pairs))
+    pk = np.fromiter((p[1] for p in idx.pairs), np.int64, len(idx.pairs))
+    gam = K[: M - 1, None] * spb[pi, pk][None, :]   # (M-1, n_pairs)
+    c[idx.n_alpha:] = np.broadcast_to(gam, (R, M - 1, len(idx.pairs))).ravel()
     if include_compute and prob.compute_speed is not None:
         # Heterogeneous-speed extension (linear): Σ α_{r,i,j}·c_j/speed_i.
-        for r in range(R):
-            for i in range(N):
-                for j in range(M):
-                    c[idx.a(r, i, j)] += comp[j] / prob.compute_speed[i]
+        ca += comp[None, None, :] / prob.compute_speed[None, :, None]
+    return c
+
+
+def _build_constraints(prob: Problem, idx: "_Index", *, tight: bool):
+    """Rate-INdependent constraint matrix (Eq. 4–6, 11) as a sparse
+    LinearConstraint — cacheable across epochs (topology drift only moves
+    the objective, never these rows)."""
+    R, N, M = idx.R, idx.N, idx.M
+    mem = prob.profile.memory_vector()
+    comp = prob.profile.compute_vector()
 
     rows, cols, vals, lo, hi = [], [], [], [], []
     row = 0
@@ -198,15 +211,40 @@ def _build_ilp(prob: Problem, *, include_compute: bool, tight: bool):
                     add_row([(g, 1.0), (ak, -1.0)], -np.inf, 0.0)
 
     A = sp.csc_matrix((vals, (rows, cols)), shape=(row, idx.n_vars))
-    return idx, c, LinearConstraint(A, np.array(lo), np.array(hi))
+    return LinearConstraint(A, np.array(lo), np.array(hi))
+
+
+def _build_ilp(prob: Problem, *, include_compute: bool, tight: bool,
+               cache: dict | None = None):
+    """Assemble (idx, c, constraints); ``cache`` (owned by the caller, e.g.
+    :class:`IncrementalSolver`) memoizes the constraint structure keyed on
+    instance shape + capacity vectors — valid because only the objective
+    depends on the rates."""
+    R, N, M = prob.n_requests, prob.n_nodes, prob.n_layers
+    # The capacity rows also encode the profile's per-layer demands, so the
+    # key must carry them — same-shaped instances with different profiles
+    # must not share constraint structure.
+    key = (R, N, M, tight, prob.mem_cap.tobytes(), prob.comp_cap.tobytes(),
+           tuple(prob.profile.memory_vector()),
+           tuple(prob.profile.compute_vector()))
+    if cache is not None and key in cache:
+        idx, constraints = cache[key]
+    else:
+        idx = _Index(R, N, M)
+        constraints = _build_constraints(prob, idx, tight=tight)
+        if cache is not None:
+            cache[key] = (idx, constraints)
+    c = _build_objective(prob, idx, include_compute=include_compute)
+    return idx, c, constraints
 
 
 def _solve_ilp_once(prob: Problem, *, include_compute: bool, tight: bool,
                     gamma_relaxed: bool, time_limit: float | None,
-                    mip_rel_gap: float) -> tuple[np.ndarray | None, float, str]:
+                    mip_rel_gap: float,
+                    cache: dict | None = None) -> tuple[np.ndarray | None, float, str]:
     R, N, M = prob.n_requests, prob.n_nodes, prob.n_layers
     idx, c, constraints = _build_ilp(prob, include_compute=include_compute,
-                                     tight=tight)
+                                     tight=tight, cache=cache)
     # Normalize the objective so HiGHS tolerances (~1e-7 absolute) are far
     # below the cost scale — latencies can be microseconds on fast links.
     finite = np.abs(c[np.isfinite(c) & (np.abs(c) > 0) & (np.abs(c) < _BIG)])
@@ -290,9 +328,78 @@ def _repair_capacity(path: np.ndarray, mem: list[float], comp: list[float],
     return bool(np.all(m_use <= mem_left + 1e-9) and np.all(c_use <= comp_left + 1e-9))
 
 
-def _solve_dp(prob: Problem, *, include_compute: bool) -> tuple[np.ndarray, float, np.ndarray]:
+def _place_request(spb: np.ndarray, K: list[float], Ks: float, src: int,
+                   mem: list[float], comp: list[float],
+                   mem_left: np.ndarray, comp_left: np.ndarray,
+                   compute_cost: np.ndarray | None) -> tuple[np.ndarray | None, float]:
+    """Place ONE request against residual capacity: lattice DP + repair loop.
+
+    The lattice DP checks per-layer feasibility, not the joint within-request
+    load; the repair loop iteratively shrinks the advertised memory AND
+    compute of the most-overloaded node and re-plans — forcing the DP to
+    spread until the joint check passes.  Shared by the cold greedy-DP solve
+    and the incremental warm re-solve.  Does NOT mutate mem_left/comp_left.
+    """
+    N = spb.shape[0]
+    path, cost = _dp_single_request(spb, K, Ks, src, mem, comp,
+                                    mem_left, comp_left, compute_cost)
+    mem_adv = mem_left.copy()
+    comp_adv = comp_left.copy()
+    for _ in range(4 * N):
+        if path is None or _repair_capacity(path, mem, comp, mem_left,
+                                            comp_left):
+            break
+        m_load = np.zeros(N)
+        c_load = np.zeros(N)
+        for j, i in enumerate(path):
+            m_load[i] += mem[j]
+            c_load[i] += comp[j]
+        m_over = m_load - mem_left
+        c_over = c_load - comp_left
+        if m_over.max() >= c_over.max() / max(comp_left.max(), 1e-9) * \
+                max(mem_left.max(), 1e-9):
+            busy = int(m_over.argmax())
+            mem_adv[busy] = max(mem_adv[busy] / 2.0, 0.0)
+            if mem_adv[busy] < min((m for m in mem if m > 0), default=0):
+                mem_adv[busy] = 0.0
+        else:
+            busy = int(c_over.argmax())
+            comp_adv[busy] = max(comp_adv[busy] / 2.0, 0.0)
+            if comp_adv[busy] < min((c for c in comp if c > 0), default=0):
+                comp_adv[busy] = 0.0
+        path, cost = _dp_single_request(spb, K, Ks, src, mem, comp,
+                                        mem_adv, comp_adv, compute_cost)
+    if path is None or not _repair_capacity(path, mem, comp, mem_left,
+                                            comp_left):
+        return None, float("inf")
+    return path, cost
+
+
+def _path_cost(spb: np.ndarray, K: list[float], Ks: float, src: int,
+               path: np.ndarray,
+               compute_cost: np.ndarray | None = None) -> float:
+    """Objective contribution of one placed path under a given spb — the same
+    quantity the DP minimizes, recomputable after the rates drift."""
+    cost = 0.0 if path[0] == src else Ks * spb[src, int(path[0])]
+    for j in range(len(path) - 1):
+        if path[j + 1] != path[j]:
+            cost += K[j] * spb[int(path[j]), int(path[j + 1])]
+    if compute_cost is not None:
+        for j, i in enumerate(path):
+            cost += compute_cost[j, int(i)]
+    return float(cost)
+
+
+def _solve_dp(prob: Problem, *, include_compute: bool,
+              max_path_cost: float | None = None) -> tuple[np.ndarray, float, np.ndarray]:
     """Sequential greedy-DP: requests placed one at a time (exact per request,
-    greedy across requests).  Returns (assign, total_comm_latency, admitted)."""
+    greedy across requests).  Returns (assign, total_comm_latency, admitted);
+    rejected rows carry the ``-1`` sentinel.
+
+    ``max_path_cost`` rejects a request whose cheapest feasible path still
+    costs more — i.e. it would ride a disconnected (``_BIG``-priced) link.
+    The paper's admission semantics: serve over a dead link is an outage, so
+    such requests are rejected rather than placed (§IV-A / Fig. 13)."""
     R, N, M = prob.n_requests, prob.n_nodes, prob.n_layers
     spb = prob.transfer_cost()
     K = prob.profile.output_vector()
@@ -304,45 +411,14 @@ def _solve_dp(prob: Problem, *, include_compute: bool) -> tuple[np.ndarray, floa
         compute_cost = per_layer * prob.horizon()
     mem_left = prob.mem_cap.astype(float).copy()
     comp_left = prob.comp_cap.astype(float).copy()
-    assign = np.zeros((R, M), np.int64)
+    assign = np.full((R, M), -1, np.int64)
     admitted = np.zeros(R, bool)
     total = 0.0
     for r in range(R):
-        path, cost = _dp_single_request(
+        path, cost = _place_request(
             spb, K, prob.profile.input_bytes, int(prob.sources[r]),
             mem, comp, mem_left, comp_left, compute_cost)
-        # Repair loop: the lattice DP checks per-layer feasibility, not the
-        # joint within-request load.  Iteratively shrink the advertised
-        # memory AND compute of the most-overloaded node and re-plan —
-        # forces the DP to spread until the joint check passes.
-        mem_adv = mem_left.copy()
-        comp_adv = comp_left.copy()
-        for _ in range(4 * N):
-            if path is None or _repair_capacity(path, mem, comp, mem_left,
-                                                comp_left):
-                break
-            m_load = np.zeros(N)
-            c_load = np.zeros(N)
-            for j, i in enumerate(path):
-                m_load[i] += mem[j]
-                c_load[i] += comp[j]
-            m_over = m_load - mem_left
-            c_over = c_load - comp_left
-            if m_over.max() >= c_over.max() / max(comp_left.max(), 1e-9) * \
-                    max(mem_left.max(), 1e-9):
-                busy = int(m_over.argmax())
-                mem_adv[busy] = max(mem_adv[busy] / 2.0, 0.0)
-                if mem_adv[busy] < min((m for m in mem if m > 0), default=0):
-                    mem_adv[busy] = 0.0
-            else:
-                busy = int(c_over.argmax())
-                comp_adv[busy] = max(comp_adv[busy] / 2.0, 0.0)
-                if comp_adv[busy] < min((c for c in comp if c > 0), default=0):
-                    comp_adv[busy] = 0.0
-            path, cost = _dp_single_request(
-                spb, K, prob.profile.input_bytes, int(prob.sources[r]),
-                mem, comp, mem_adv, comp_adv, compute_cost)
-        if path is None or not _repair_capacity(path, mem, comp, mem_left, comp_left):
+        if path is None or (max_path_cost is not None and cost > max_path_cost):
             admitted[r] = False
             continue
         for j, i in enumerate(path):
@@ -361,18 +437,28 @@ def _solve_dp(prob: Problem, *, include_compute: bool) -> tuple[np.ndarray, floa
 def solve_ould(prob: Problem, *, solver: Solver = "ilp",
                include_compute: bool = False, tight: bool = True,
                gamma_relaxed: bool = True, time_limit: float | None = None,
-               mip_rel_gap: float = 1e-6) -> Solution:
+               mip_rel_gap: float = 1e-6,
+               constraint_cache: dict | None = None,
+               max_path_cost: float | None = None) -> Solution:
     """Solve an OULD / OULD-MP instance.
 
     When the full request set is infeasible (system over capacity), requests
     are shed from the tail until feasible — the paper's 'additional incoming
-    requests are rejected' behaviour (§IV-A, shared-data plateaus).
+    requests are rejected' behaviour (§IV-A, shared-data plateaus).  Rejected
+    rows of ``assign`` carry the ``-1`` sentinel and must never be read.
+
+    ``constraint_cache`` (a caller-owned dict) memoizes the sparse ILP
+    constraint matrix across repeated solves of same-shaped instances —
+    topology drift only changes the objective coefficients.
     """
     t0 = time.perf_counter()
     R = prob.n_requests
     if solver == "dp":
-        assign, obj, admitted = _solve_dp(prob, include_compute=include_compute)
-        return Solution(assign, obj, "feasible", time.perf_counter() - t0,
+        assign, obj, admitted = _solve_dp(prob, include_compute=include_compute,
+                                          max_path_cost=max_path_cost)
+        n_rej = int(prob.n_requests - admitted.sum())
+        status = "feasible" if n_rej == 0 else f"rejected:{n_rej}"
+        return Solution(assign, obj, status, time.perf_counter() - t0,
                         admitted, solver="dp")
 
     admitted = np.ones(R, bool)
@@ -384,15 +470,239 @@ def solve_ould(prob: Problem, *, solver: Solver = "ilp",
         assign, obj, status = _solve_ilp_once(
             sub, include_compute=include_compute, tight=tight,
             gamma_relaxed=gamma_relaxed, time_limit=time_limit,
-            mip_rel_gap=mip_rel_gap)
+            mip_rel_gap=mip_rel_gap, cache=constraint_cache)
         if assign is not None:
-            full = np.zeros((R, prob.n_layers), np.int64)
+            full = np.full((R, prob.n_layers), -1, np.int64)
             full[:n_try] = assign
             admitted[:] = False
             admitted[:n_try] = True
             st = "optimal" if n_try == R else f"rejected:{R - n_try}"
             return Solution(full, obj, st, time.perf_counter() - t0, admitted)
         n_try -= 1
-    return Solution(np.zeros((R, prob.n_layers), np.int64), float("inf"),
+    return Solution(np.full((R, prob.n_layers), -1, np.int64), float("inf"),
                     "infeasible", time.perf_counter() - t0,
                     np.zeros(R, bool))
+
+
+# ---------------------------------------------------------------------------
+# Incremental (warm-started) epoch re-solves
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class ResolveStats:
+    """What one warm re-solve actually did."""
+
+    n_kept: int            # requests whose placement survived unchanged
+    n_replaced: int        # requests re-placed (path touched a changed node)
+    n_changed_nodes: int   # nodes incident to a materially changed link
+    cold: bool             # True when the solve fell back to a full solve
+    solve_time_s: float
+
+
+class IncrementalSolver:
+    """Warm-started repeated OULD solves over a drifting topology.
+
+    The swarm serving simulator re-solves placement every epoch; a cold solve
+    repeats three kinds of work this class caches instead:
+
+    1. **Constraint structure** — the ILP's sparse constraint matrix (Eq. 4–6,
+       11) depends only on the instance shape and capacities, never on the
+       rates, so it is memoized (``constraint_cache``) and only the objective
+       vector is rebuilt per epoch (:func:`_build_objective`).
+    2. **Previous epoch's assignment** — for the DP path, requests whose
+       placement does not touch any *changed* node keep their paths and
+       capacity reservations verbatim; only requests incident to a changed
+       link (rate drift beyond ``rel_change``, connect/disconnect flips, node
+       failure/rejoin) are re-placed against the residual capacity.
+    3. **Request identity** — callers tag requests with stable ids so streams
+       that persist across epochs inherit their placement; departed ids
+       release capacity implicitly, new ids are placed fresh, and previously
+       rejected ids retry admission every epoch.
+
+    The warm re-solve reproduces the cold greedy-DP objective exactly when
+    every request is re-placed (same order, same residual-capacity sequence),
+    which is the invariant the tests pin down; when few links change it skips
+    nearly all DP work — the ≥2× epoch-re-solve speedup the benchmark
+    measures.  Capacities and the profile are fixed per instance; per-epoch
+    node outages are expressed via the ``alive`` mask.
+    """
+
+    def __init__(self, profile: ModelProfile, mem_cap: np.ndarray,
+                 comp_cap: np.ndarray,
+                 compute_speed: np.ndarray | None = None, *,
+                 solver: Solver = "dp", include_compute: bool = False,
+                 rel_change: float = 0.05, max_path_cost: float | None = None,
+                 rate_unit_bytes: float = 1 / 8.0, **ilp_kw):
+        self.profile = profile
+        self.mem_cap = np.asarray(mem_cap, float)
+        self.comp_cap = np.asarray(comp_cap, float)
+        self.compute_speed = compute_speed
+        self.solver: Solver = solver
+        self.include_compute = include_compute
+        self.rel_change = rel_change
+        self.max_path_cost = max_path_cost
+        self.rate_unit_bytes = rate_unit_bytes
+        self.ilp_kw = ilp_kw
+        self.constraint_cache: dict = {}
+        self._paths: dict[int, np.ndarray] = {}   # request id → kept path
+        self._spb: np.ndarray | None = None       # previous horizon-summed spb
+        self._alive: np.ndarray | None = None
+
+    # -- problem assembly ---------------------------------------------------
+
+    def _problem(self, rates: np.ndarray, sources: np.ndarray,
+                 alive: np.ndarray | None) -> Problem:
+        mem, comp = self.mem_cap, self.comp_cap
+        if alive is not None and not alive.all():
+            mem = np.where(alive, mem, 0.0)
+            comp = np.where(alive, comp, 0.0)
+            # A dead node's links are down too (ρ = 0 ⇔ disconnected), so a
+            # request *sourced* at it cannot be admitted over phantom links —
+            # the alive mask alone must be sufficient for callers.
+            rates = rates.copy()
+            if rates.ndim == 3:
+                rates[:, ~alive, :] = 0.0
+                rates[:, :, ~alive] = 0.0
+            else:
+                rates[~alive, :] = 0.0
+                rates[:, ~alive] = 0.0
+        return Problem(self.profile, mem, comp, rates,
+                       np.asarray(sources, np.int64), self.compute_speed,
+                       self.rate_unit_bytes)
+
+    def _changed_nodes(self, spb: np.ndarray,
+                       alive: np.ndarray | None) -> np.ndarray:
+        """(N,) bool — nodes incident to a link whose seconds/byte moved by
+        more than ``rel_change`` (covers connect/disconnect flips: the _BIG
+        sentinel dwarfs any real value), or whose alive flag flipped.
+
+        Drift is measured against the *reference* spb — the value each link
+        had when its placements were last re-priced — not merely the previous
+        epoch, so a link fading slowly (below the per-epoch threshold) still
+        accumulates drift and eventually triggers a re-place.  This bounds
+        the staleness of every kept placement to one ``rel_change`` band per
+        link instead of letting it compound unboundedly."""
+        n = spb.shape[0]
+        if self._spb is None or self._spb.shape != spb.shape:
+            return np.ones(n, bool)
+        a, b = self._spb, spb
+        denom = np.maximum(np.minimum(a, b), 1e-30)
+        link_changed = np.abs(a - b) > self.rel_change * denom
+        mask = link_changed.any(axis=0) | link_changed.any(axis=1)
+        prev_alive = self._alive if self._alive is not None else np.ones(n, bool)
+        cur_alive = alive if alive is not None else np.ones(n, bool)
+        return mask | (prev_alive != cur_alive)
+
+    def _remember(self, spb: np.ndarray, alive: np.ndarray | None,
+                  request_ids, assign: np.ndarray, admitted: np.ndarray,
+                  changed: np.ndarray | None = None) -> None:
+        if changed is None or self._spb is None or self._spb.shape != spb.shape:
+            self._spb = spb.copy()
+        else:
+            # Advance the reference only for links incident to a changed node
+            # (their placements were just re-priced); untouched links keep
+            # their old reference so slow drift accumulates.
+            touched = changed[:, None] | changed[None, :]
+            self._spb = np.where(touched, spb, self._spb)
+        self._alive = (np.asarray(alive, bool).copy()
+                       if alive is not None else np.ones(spb.shape[0], bool))
+        self._paths = {int(rid): assign[r].copy()
+                       for r, rid in enumerate(request_ids) if admitted[r]}
+
+    # -- entry points -------------------------------------------------------
+
+    def solve(self, rates: np.ndarray, sources: np.ndarray,
+              request_ids=None,
+              alive: np.ndarray | None = None) -> tuple[Solution, ResolveStats]:
+        """Cold solve (still reusing the ILP constraint cache); primes the
+        warm state for subsequent :meth:`resolve` calls."""
+        t0 = time.perf_counter()
+        prob = self._problem(rates, sources, alive)
+        if request_ids is None:
+            request_ids = list(range(prob.n_requests))
+        sol = solve_ould(prob, solver=self.solver,
+                         include_compute=self.include_compute,
+                         constraint_cache=self.constraint_cache,
+                         max_path_cost=self.max_path_cost,
+                         **self.ilp_kw)
+        spb = prob.transfer_cost()
+        self._remember(spb, alive, request_ids, sol.assign, sol.admitted)
+        dt = time.perf_counter() - t0
+        return sol, ResolveStats(0, prob.n_requests, prob.n_nodes, True, dt)
+
+    def resolve(self, rates: np.ndarray, sources: np.ndarray,
+                request_ids=None,
+                alive: np.ndarray | None = None) -> tuple[Solution, ResolveStats]:
+        """Warm epoch re-solve: keep unaffected placements, re-place the rest.
+
+        Falls back to a (constraint-cached) cold solve on the first call and
+        in ILP mode, where scipy's MILP cannot consume an incumbent.
+        """
+        t0 = time.perf_counter()
+        prob = self._problem(rates, sources, alive)
+        R, M = prob.n_requests, prob.n_layers
+        if request_ids is None:
+            request_ids = list(range(R))
+        if self.solver != "dp" or self._spb is None:
+            return self.solve(rates, sources, request_ids, alive)
+
+        spb = prob.transfer_cost()
+        changed = self._changed_nodes(spb, alive)
+        # A departed stream frees its nodes' reservations — a capacity event
+        # as real as a link change: placements (and sources) on those nodes
+        # get a chance to re-pack onto the freed capacity.
+        live_ids = {int(rid) for rid in request_ids}
+        for rid, prev in self._paths.items():
+            if rid not in live_ids:
+                changed[prev] = True
+        K = self.profile.output_vector()
+        Ks = self.profile.input_bytes
+        mem = self.profile.memory_vector()
+        comp = self.profile.compute_vector()
+        compute_cost = None
+        if self.include_compute and self.compute_speed is not None:
+            per_layer = np.array(comp)[:, None] / self.compute_speed[None, :]
+            compute_cost = per_layer * prob.horizon()
+
+        mem_left = prob.mem_cap.astype(float).copy()
+        comp_left = prob.comp_cap.astype(float).copy()
+        assign = np.full((R, M), -1, np.int64)
+        admitted = np.zeros(R, bool)
+        todo: list[int] = []
+        for r, rid in enumerate(request_ids):
+            prev = self._paths.get(int(rid))
+            src = int(prob.sources[r])
+            if prev is not None and not changed[prev].any() and not changed[src]:
+                for j, i in enumerate(prev):          # keep: reserve capacity
+                    mem_left[i] -= mem[j]
+                    comp_left[i] -= comp[j]
+                assign[r] = prev
+                admitted[r] = True
+            else:
+                todo.append(r)
+        n_kept = R - len(todo)
+        for r in todo:
+            path, cost = _place_request(spb, K, Ks, int(prob.sources[r]),
+                                        mem, comp, mem_left, comp_left,
+                                        compute_cost)
+            if path is None or (self.max_path_cost is not None
+                                and cost > self.max_path_cost):
+                continue
+            for j, i in enumerate(path):
+                mem_left[i] -= mem[j]
+                comp_left[i] -= comp[j]
+            assign[r] = path
+            admitted[r] = True
+        # Objective re-priced for EVERY admitted request under the new rates —
+        # kept paths are not assumed to still cost what they used to.
+        total = sum(_path_cost(spb, K, Ks, int(prob.sources[r]), assign[r],
+                               compute_cost)
+                    for r in range(R) if admitted[r])
+        self._remember(spb, alive, request_ids, assign, admitted, changed)
+        dt = time.perf_counter() - t0
+        n_rej = int(R - admitted.sum())
+        status = "feasible" if n_rej == 0 else f"rejected:{n_rej}"
+        sol = Solution(assign, float(total), status, dt, admitted,
+                       solver="dp-warm")
+        return sol, ResolveStats(n_kept, len(todo), int(changed.sum()),
+                                 False, dt)

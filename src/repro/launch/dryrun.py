@@ -312,6 +312,14 @@ def run_cell(arch: str, shape_name: str, multi_pod: bool,
         mem_rec = {k: getattr(mem, k) for k in dir(mem)
                    if k.endswith("bytes") or k.endswith("_in_bytes")
                    and not k.startswith("_")}
+        if "peak_memory_in_bytes" not in mem_rec:
+            # older jaxlib memory_analysis lacks the peak field; derive it
+            # (aliased/donated argument bytes are not held twice)
+            mem_rec["peak_memory_in_bytes"] = (
+                mem_rec.get("argument_size_in_bytes", 0)
+                + mem_rec.get("output_size_in_bytes", 0)
+                + mem_rec.get("temp_size_in_bytes", 0)
+                - mem_rec.get("alias_size_in_bytes", 0))
         cost = compiled.cost_analysis()
         cost = cost[0] if isinstance(cost, (list, tuple)) else cost
         coll = collective_bytes(compiled.as_text())

@@ -18,6 +18,7 @@ import numpy as np
 
 from ..configs.base import ModelConfig
 from ..core import Problem, evaluate, solve_ould
+from ..core.ould import IncrementalSolver, ResolveStats, Solution
 from ..core.profiles import ModelProfile, lm_profile
 from ..models import transformer
 from . import steps as steps_mod
@@ -61,6 +62,45 @@ class Server:
 # ---------------------------------------------------------------------------
 # OULD request admission/placement over a serving pool
 # ---------------------------------------------------------------------------
+
+class AdmissionController:
+    """Epoch-based admission + placement for a serving pool.
+
+    Wraps :class:`~repro.core.ould.IncrementalSolver` so repeated admission
+    rounds (the swarm simulator's epochs, or a pod's periodic re-placement
+    after stragglers/failures) are warm-started: placements of streams that
+    persist across rounds are kept unless the topology changed under them,
+    and the ILP constraint structure is cached.  One controller instance ==
+    one pool with fixed per-node capacities; per-round outages go through
+    ``alive``.
+    """
+
+    def __init__(self, profile: ModelProfile, mem_cap: np.ndarray,
+                 comp_cap: np.ndarray,
+                 compute_speed: np.ndarray | None = None, *,
+                 solver: str = "dp", rel_change: float = 0.05, **solver_kw):
+        self._inc = IncrementalSolver(
+            profile, mem_cap, comp_cap, compute_speed,
+            solver=solver, rel_change=rel_change, **solver_kw)  # type: ignore[arg-type]
+        self.history: list[ResolveStats] = []
+
+    def admit(self, rates: np.ndarray, sources: np.ndarray,
+              request_ids=None, alive: np.ndarray | None = None,
+              cold: bool = False) -> tuple[Solution, ResolveStats]:
+        """Place this round's active request set; returns (Solution, stats).
+
+        ``request_ids`` are stable stream ids (placement inheritance across
+        rounds); ``cold=True`` forces a from-scratch solve (the baseline the
+        warm path is benchmarked against)."""
+        fn = self._inc.solve if cold else self._inc.resolve
+        sol, stats = fn(rates, sources, request_ids, alive)
+        self.history.append(stats)
+        return sol, stats
+
+    @property
+    def total_solve_time_s(self) -> float:
+        return float(sum(s.solve_time_s for s in self.history))
+
 
 def schedule_requests(cfg: ModelConfig, *, n_nodes: int, requests: int,
                       hbm_bytes: float, flops_budget: float,

@@ -1,0 +1,347 @@
+"""Event-driven swarm serving simulator: streaming requests on a moving swarm.
+
+The paper's static instances answer "where do the layers go *right now*";
+this simulator answers the question the paper actually motivates OULD-MP
+with: how do placement policies behave when the network changes *under* the
+computation — UAVs move (link rates drift, inter-group links fade beyond
+range), nodes drop out and rejoin, and classification requests arrive as a
+Poisson stream instead of one batch.
+
+Simulator knobs → paper sections
+--------------------------------
+========================  ====================================================
+knob                      paper grounding
+========================  ====================================================
+``n_groups``/``area_m``   §III-C RPG mobility [40]; multi-group sweeps make
+                          inter-group links cross ``max_range`` (ρ→0), the
+                          disconnection argument of Fig. 13
+``tick_s``                §III-C time-step Δt at which positions are recorded
+                          and ρ(t) re-sampled via Eq. (1) (``core/radio.py``)
+``epoch_ticks``           §III-C re-optimization period: OULD re-solves on the
+                          fresh snapshot, OULD-MP once per epoch over the
+                          predicted horizon (Eq. 14; T = epoch_ticks)
+``arrival_rate_hz``       §IV "incoming requests" axis (Fig. 4–7 sweeps load;
+                          here load arrives as a Poisson stream)
+``hold_ticks_mean``       §III-A each request is a surveillance stream served
+                          every time step until its source stops capturing
+``mem_mb``/``gflops``     §IV node calibration: {256, 512} MB, 9.5 GFLOPS
+``deadline_s``            §I surveillance timeliness requirement (deadline
+                          misses are the cost of serving over a faded link)
+``mtbf_s``/``mttr_s``     §III-C "UAVs may leave the swarm" — unpredicted
+                          churn, invisible to both OULD and OULD-MP horizons
+========================  ====================================================
+
+Policies: ``ould`` (snapshot ILP/DP re-solved each epoch, warm-started via
+:class:`~repro.core.ould.IncrementalSolver`), ``ould_mp`` (horizon objective
+over the epoch's predicted rates), and the three stateless heuristics of
+§IV-A.  All policies consume the identical event tape (same seed ⇒ same
+arrivals, holds, churn, trajectories), so per-request metrics are paired.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+from ..core.events import EventKind, EventQueue, churn_events, poisson_process
+from ..core.heuristics import solve_heuristic
+from ..core.latency import evaluate
+from ..core.mobility import MultiGroupMobility, RPGParams
+from ..core.ould import Problem, Solution
+from ..core.profiles import ModelProfile, lenet_profile
+from ..core.radio import RadioParams, rate_matrix
+from .serve import AdmissionController
+
+POLICIES = ("ould", "ould_mp", "nearest", "hrm", "nearest_hrm")
+
+MB = 1e6
+
+
+@dataclasses.dataclass(frozen=True)
+class SwarmScenario:
+    """One time-dynamic serving scenario (defaults ≈ paper §IV, 500 m area)."""
+
+    n_uavs: int = 10
+    n_groups: int = 2
+    area_m: float = 500.0
+    member_radius_m: float = 25.0
+    leader_speed_mps: float = 5.0
+    homogeneous: bool = False      # Fig. 2a: frozen intra-group geometry
+    tick_s: float = 1.0
+    duration_ticks: int = 120
+    epoch_ticks: int = 15
+    arrival_rate_hz: float = 0.15
+    hold_ticks_mean: float = 45.0
+    hotspots: int = 3              # request sources live in group 0
+    mem_mb_hotspot_group: float = 192.0   # scarce: forces offload
+    mem_mb_other_groups: float = 512.0    # paper's high-memory level
+    comp_cap_flops: float = 95e9   # 9.5 GFLOPS × 10 s decision window
+    gflops: float = 9.5e9
+    deadline_s: float = 1.5
+    mtbf_s: float = float("inf")   # churn off by default
+    mttr_s: float = 30.0
+    rel_change: float = 0.05       # incremental-solver link-drift threshold
+    max_path_cost_s: float = 1e6   # admission bar: reject _BIG-priced paths
+    radio: RadioParams = RadioParams()
+
+    def mobility(self, seed: int) -> MultiGroupMobility:
+        return MultiGroupMobility(
+            RPGParams(n_uavs=self.n_uavs, area_m=self.area_m,
+                      member_radius_m=self.member_radius_m,
+                      leader_speed_mps=self.leader_speed_mps,
+                      step_s=self.tick_s, homogeneous=self.homogeneous),
+            n_groups=self.n_groups, seed=seed)
+
+    def mem_cap(self, group_of: np.ndarray) -> np.ndarray:
+        return np.where(group_of == 0, self.mem_mb_hotspot_group * MB,
+                        self.mem_mb_other_groups * MB)
+
+
+@dataclasses.dataclass(frozen=True)
+class StreamRequest:
+    id: int
+    source: int
+    arrive_tick: int
+    depart_tick: int
+
+
+@dataclasses.dataclass
+class EpochLog:
+    tick: int
+    n_active: int
+    n_admitted: int
+    n_kept: int
+    n_replaced: int
+    solve_time_s: float
+    objective: float
+    feasible: bool
+
+
+@dataclasses.dataclass
+class SimResult:
+    policy: str
+    n_arrivals: int
+    n_never_admitted: int        # streams rejected at every epoch they lived
+    served: int                  # serve attempts by admitted streams
+    missed: int                  # serves beyond deadline (incl. link outage)
+    latencies: np.ndarray        # finite realized per-serve latencies (s)
+    epochs: list[EpochLog]
+
+    @property
+    def deadline_miss_rate(self) -> float:
+        return self.missed / self.served if self.served else 0.0
+
+    @property
+    def rejection_rate(self) -> float:
+        return self.n_never_admitted / self.n_arrivals if self.n_arrivals else 0.0
+
+    @property
+    def avg_latency_s(self) -> float:
+        return float(self.latencies.mean()) if self.latencies.size else float("inf")
+
+    @property
+    def total_resolve_s(self) -> float:
+        return float(sum(e.solve_time_s for e in self.epochs))
+
+
+def _masked(rates: np.ndarray, alive: np.ndarray) -> np.ndarray:
+    """Zero every link touching a dead node (ρ = 0 ⇔ disconnected)."""
+    if alive.all():
+        return rates
+    out = rates.copy()
+    if out.ndim == 3:                     # (T, N, N) horizon stack
+        out[:, ~alive, :] = 0.0
+        out[:, :, ~alive] = 0.0
+    else:
+        out[~alive, :] = 0.0
+        out[:, ~alive] = 0.0
+    return out
+
+
+def _spb(rates: np.ndarray) -> np.ndarray:
+    """(N,N) realized seconds/byte of one tick's snapshot (Eq. 1 inverted;
+    matches Problem.transfer_cost's bits/s convention)."""
+    with np.errstate(divide="ignore"):
+        s = np.where(rates > 0, 8.0 / np.maximum(rates, 1e-30), np.inf)
+    np.fill_diagonal(s, 0.0)
+    return s
+
+
+def _serve_once(path: np.ndarray, src: int, spb_t: np.ndarray,
+                alive: np.ndarray, K: list[float], Ks: float,
+                comp: list[float], speed: np.ndarray) -> float:
+    """Realized end-to-end latency of one frame at one tick (inf = outage)."""
+    if not alive[src] or not alive[path].all():
+        return float("inf")
+    lat = 0.0 if path[0] == src else Ks * spb_t[src, int(path[0])]
+    for j in range(len(path)):
+        i = int(path[j])
+        lat += comp[j] / speed[i]
+        if j + 1 < len(path) and path[j + 1] != i:
+            lat += K[j] * spb_t[i, int(path[j + 1])]
+    return float(lat)
+
+
+def simulate(scn: SwarmScenario, policy: str, seed: int = 0, *,
+             profile: ModelProfile | None = None,
+             cold_resolves: bool = False) -> SimResult:
+    """Run one policy over the scenario's event tape.
+
+    ``cold_resolves=True`` forces every epoch re-solve from scratch (the
+    baseline the warm-started incremental path is measured against); it only
+    affects solve *time*, never the event tape.
+    """
+    if policy not in POLICIES:
+        raise ValueError(f"unknown policy {policy!r}; one of {POLICIES}")
+    profile = profile or lenet_profile()
+    rng = np.random.default_rng(seed)
+    T = scn.duration_ticks
+    mob = scn.mobility(seed)
+    pos = mob.positions(T, seed=seed + 1)
+    rates_t = [rate_matrix(pos[t], scn.radio) for t in range(T)]
+
+    mem_cap = scn.mem_cap(mob.group_of)
+    comp_cap = np.full(scn.n_uavs, scn.comp_cap_flops)
+    speed = np.full(scn.n_uavs, scn.gflops)
+    K = profile.output_vector()
+    Ks = profile.input_bytes
+    comp = profile.compute_vector()
+
+    # --- event tape (identical across policies for a given seed) -----------
+    q = EventQueue()
+    arrivals = poisson_process(rng, scn.arrival_rate_hz, T * scn.tick_s)
+    streams: dict[int, StreamRequest] = {}
+    for i, t_arr in enumerate(arrivals):
+        hold = max(1, int(round(rng.exponential(scn.hold_ticks_mean))))
+        src = int(rng.integers(0, min(scn.hotspots, scn.n_uavs)))
+        at = int(t_arr / scn.tick_s)
+        streams[i] = StreamRequest(i, src, at, min(at + hold, T))
+        q.push(t_arr, EventKind.ARRIVAL, i)
+        q.push(streams[i].depart_tick * scn.tick_s, EventKind.DEPARTURE, i)
+    protected = frozenset(range(min(scn.hotspots, scn.n_uavs)))
+    for ce in churn_events(rng, scn.n_uavs, T * scn.tick_s, scn.mtbf_s,
+                           scn.mttr_s, protected=protected):
+        q.push(ce.time, ce.kind, ce.node)
+    for k in range(0, T, scn.epoch_ticks):
+        q.push(k * scn.tick_s, EventKind.EPOCH)
+    for t in range(T):
+        q.push(t * scn.tick_s, EventKind.MOBILITY_TICK, t)
+
+    # --- state -------------------------------------------------------------
+    alive = np.ones(scn.n_uavs, bool)
+    active: dict[int, StreamRequest] = {}
+    placed: dict[int, np.ndarray] = {}     # stream id → current path
+    ever_admitted: set[int] = set()
+    ctrl: AdmissionController | None = None
+    if policy in ("ould", "ould_mp"):
+        ctrl = AdmissionController(profile, mem_cap, comp_cap, speed,
+                                   solver="dp", rel_change=scn.rel_change,
+                                   max_path_cost=scn.max_path_cost_s)
+
+    epochs: list[EpochLog] = []
+    latencies: list[float] = []
+    served = missed = 0
+
+    def replace_all(tick: int) -> None:
+        nonlocal placed
+        act = sorted(active.values(), key=lambda s: s.id)
+        placed = {}
+        if not act:
+            epochs.append(EpochLog(tick, 0, 0, 0, 0, 0.0, 0.0, True))
+            return
+        sources = np.array([s.source for s in act], np.int64)
+        ids = [s.id for s in act]
+        snap = _masked(rates_t[tick], alive)
+        if policy == "ould_mp":
+            end = min(tick + scn.epoch_ticks, T)
+            rates = _masked(np.stack(rates_t[tick:end]),
+                            alive)  # known-dead nodes priced out over horizon
+        else:
+            rates = snap
+        if ctrl is not None:
+            sol, stats = ctrl.admit(rates, sources, ids, alive,
+                                    cold=cold_resolves)
+            n_kept, n_rep = stats.n_kept, stats.n_replaced
+        else:
+            prob = Problem(profile, np.where(alive, mem_cap, 0.0),
+                           np.where(alive, comp_cap, 0.0), snap, sources,
+                           speed)
+            sol = solve_heuristic(prob, policy)  # type: ignore[arg-type]
+            n_kept, n_rep = 0, len(act)
+        for row, s in enumerate(act):
+            if sol.admitted[row]:
+                placed[s.id] = sol.assign[row]
+                ever_admitted.add(s.id)
+        # capacity invariant under the *snapshot* problem (Eq. 4/5)
+        feas_prob = Problem(profile, np.where(alive, mem_cap, 0.0),
+                            np.where(alive, comp_cap, 0.0), snap, sources,
+                            speed)
+        ev = evaluate(feas_prob, sol)
+        epochs.append(EpochLog(tick, len(act), int(sol.admitted.sum()),
+                               n_kept, n_rep, sol.solve_time_s,
+                               sol.objective, ev.feasible))
+
+    while q:
+        ev = q.pop()
+        if ev.kind == EventKind.ARRIVAL:
+            active[ev.payload] = streams[ev.payload]
+        elif ev.kind == EventKind.DEPARTURE:
+            active.pop(ev.payload, None)
+            placed.pop(ev.payload, None)
+        elif ev.kind == EventKind.NODE_FAIL:
+            alive[ev.payload] = False
+        elif ev.kind == EventKind.NODE_REJOIN:
+            alive[ev.payload] = True
+        elif ev.kind == EventKind.EPOCH:
+            replace_all(int(round(ev.time / scn.tick_s)))
+        elif ev.kind == EventKind.MOBILITY_TICK:
+            t = ev.payload
+            spb_t = _spb(_masked(rates_t[t], alive))
+            for sid, path in placed.items():
+                s = streams[sid]
+                if not (s.arrive_tick <= t < s.depart_tick):
+                    continue
+                lat = _serve_once(path, s.source, spb_t, alive, K, Ks,
+                                  comp, speed)
+                served += 1
+                if lat > scn.deadline_s:
+                    missed += 1
+                if np.isfinite(lat):
+                    # every finite serve counts toward the latency average —
+                    # censoring over-deadline serves would reward missing
+                    latencies.append(lat)
+
+    n_never = sum(1 for s in streams.values() if s.id not in ever_admitted)
+    return SimResult(policy, len(streams), n_never, served, missed,
+                     np.asarray(latencies), epochs)
+
+
+def compare_policies(scn: SwarmScenario, seed: int = 0,
+                     policies=POLICIES,
+                     profile: ModelProfile | None = None) -> dict[str, SimResult]:
+    """Run every policy over the SAME event tape (paired comparison)."""
+    return {p: simulate(scn, p, seed, profile=profile) for p in policies}
+
+
+def warm_vs_cold(scn: SwarmScenario, seed: int = 0,
+                 profile: ModelProfile | None = None) -> dict:
+    """Measure what the incremental solver buys: identical OULD runs, one
+    with warm epoch re-solves, one forced cold.  The event tape and placement
+    *decisions* may only differ where the warm path keeps a placement the
+    cold solve would recompute identically — the objective ratio reports any
+    drift."""
+    warm = simulate(scn, "ould", seed, profile=profile, cold_resolves=False)
+    cold = simulate(scn, "ould", seed, profile=profile, cold_resolves=True)
+    ratios = [w.objective / c.objective
+              for w, c in zip(warm.epochs, cold.epochs)
+              if c.objective > 0 and np.isfinite(c.objective)]
+    return {
+        "warm_solve_s": warm.total_resolve_s,
+        "cold_solve_s": cold.total_resolve_s,
+        "speedup": (cold.total_resolve_s / warm.total_resolve_s
+                    if warm.total_resolve_s > 0 else float("inf")),
+        "objective_ratio_max": max(ratios) if ratios else 1.0,
+        "warm": warm,
+        "cold": cold,
+    }

@@ -18,6 +18,22 @@ EXPECTED_SKIPS = {  # long_500k on pure full-attention archs (DESIGN.md §5)
 }
 
 
+@pytest.fixture(scope="module", autouse=True)
+def _ensure_dryrun_artifacts():
+    """On a clean checkout, generate any missing baseline dry-run artifact
+    via ``repro.launch.dryrun`` instead of hard-failing.  The committed
+    artifact set makes this a no-op in CI; regenerating the full grid from
+    scratch compiles every (arch × shape × mesh) cell and takes a while."""
+    missing = [(arch, shape, mesh == "multi")
+               for arch in C.ARCH_IDS for shape in SHAPES
+               for mesh in ("single", "multi")
+               if not (ART / f"{arch}__{shape}__{mesh}.json").exists()]
+    if missing:
+        from repro.launch import dryrun
+        for arch, shape, multi in missing:
+            dryrun.run_cell(arch, shape, multi, verbose=False)
+
+
 def test_registry_has_all_ten_archs():
     assert len(C.ARCH_IDS) == 10
     for arch in C.ARCH_IDS:

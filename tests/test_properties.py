@@ -1,7 +1,12 @@
 """Hypothesis property tests on system invariants."""
 
 import numpy as np
-from hypothesis import given, settings, strategies as st
+import pytest
+
+# Optional dep: a missing hypothesis degrades this module to a skip instead
+# of aborting the whole suite's collection.
+pytest.importorskip("hypothesis")
+from hypothesis import given, settings, strategies as st  # noqa: E402
 
 from repro.core import (Problem, evaluate, rate_matrix, solve_ould,
                         to_stages)

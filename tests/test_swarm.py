@@ -1,0 +1,240 @@
+"""Event-driven swarm serving simulator + incremental OULD re-solves."""
+
+import numpy as np
+import pytest
+
+from repro.core import (IncrementalSolver, MultiGroupMobility, Problem,
+                        RPGParams, evaluate, lenet_profile, rate_matrix,
+                        solve_heuristic, solve_ould)
+from repro.core.events import EventKind, EventQueue, churn_events, poisson_process
+from repro.core.ould import Solution
+from repro.core.profiles import LayerProfile, ModelProfile
+from repro.runtime.swarm import SwarmScenario, compare_policies, simulate
+
+MB = 1e6
+
+SMALL = SwarmScenario(duration_ticks=60, arrival_rate_hz=0.3,
+                      mtbf_s=60.0, mttr_s=20.0)
+
+
+# ---------------------------------------------------------------------------
+# event primitives
+# ---------------------------------------------------------------------------
+
+def test_poisson_process_deterministic_and_sorted():
+    a = poisson_process(np.random.default_rng(7), 0.5, 100.0)
+    b = poisson_process(np.random.default_rng(7), 0.5, 100.0)
+    np.testing.assert_array_equal(a, b)
+    assert (np.diff(a) > 0).all() and (a >= 0).all() and (a < 100.0).all()
+    assert poisson_process(np.random.default_rng(0), 0.0, 100.0).size == 0
+
+
+def test_event_queue_stable_ordering():
+    q = EventQueue()
+    q.push(1.0, EventKind.MOBILITY_TICK, 1)
+    q.push(0.5, EventKind.ARRIVAL, 0)
+    q.push(1.0, EventKind.EPOCH)          # same time, pushed later
+    assert q.pop().kind == EventKind.ARRIVAL
+    first, second = q.pop(), q.pop()
+    assert first.kind == EventKind.MOBILITY_TICK   # insertion order on ties
+    assert second.kind == EventKind.EPOCH
+    assert not q
+
+
+def test_churn_fail_rejoin_alternate_and_protect():
+    evs = churn_events(np.random.default_rng(3), 6, 500.0, mtbf_s=50.0,
+                       mttr_s=10.0, protected=frozenset({0, 1}))
+    assert evs, "expected some churn on a 500 s horizon"
+    assert all(e.node >= 2 for e in evs)
+    per_node: dict = {}
+    for e in evs:
+        per_node.setdefault(e.node, []).append(e.kind)
+    for kinds in per_node.values():
+        for a, b in zip(kinds, kinds[1:]):
+            assert a != b                # fail and rejoin strictly alternate
+        assert kinds[0] == EventKind.NODE_FAIL
+
+
+def test_multigroup_links_fade_and_window_deterministic():
+    mob = MultiGroupMobility(RPGParams(n_uavs=10, area_m=500.0), n_groups=2,
+                             seed=0)
+    pos = mob.positions(120, seed=3)
+    inter = mob.group_of[:, None] != mob.group_of[None, :]
+    conn = np.array([(rate_matrix(pos[t])[inter] > 0).mean()
+                     for t in range(0, 120, 10)])
+    assert conn.min() == 0.0 and conn.max() == 1.0  # fades out AND in
+    np.testing.assert_allclose(mob.positions(20, seed=3, t0=30),
+                               mob.positions(50, seed=3)[30:])
+
+
+# ---------------------------------------------------------------------------
+# simulator invariants
+# ---------------------------------------------------------------------------
+
+def test_simulator_deterministic_under_fixed_seed():
+    a = simulate(SMALL, "ould", seed=5)
+    b = simulate(SMALL, "ould", seed=5)
+    np.testing.assert_array_equal(a.latencies, b.latencies)
+    assert (a.served, a.missed, a.n_arrivals, a.n_never_admitted) == \
+           (b.served, b.missed, b.n_arrivals, b.n_never_admitted)
+    assert [e.objective for e in a.epochs] == [e.objective for e in b.epochs]
+
+
+def test_same_event_tape_across_policies():
+    res = compare_policies(SMALL, seed=1, policies=("ould", "nearest"))
+    a, b = res["ould"], res["nearest"]
+    assert a.n_arrivals == b.n_arrivals
+    assert [e.tick for e in a.epochs] == [e.tick for e in b.epochs]
+    assert [e.n_active for e in a.epochs] == [e.n_active for e in b.epochs]
+
+
+@pytest.mark.parametrize("policy", ["ould", "ould_mp", "nearest", "hrm",
+                                    "nearest_hrm"])
+def test_capacity_invariants_every_epoch(policy):
+    r = simulate(SMALL, policy, seed=2)
+    assert r.epochs, "simulation must hit at least one epoch boundary"
+    assert all(e.feasible for e in r.epochs)
+    assert all(e.n_admitted <= e.n_active for e in r.epochs)
+
+
+def test_mp_beats_snapshot_ould_on_predicted_disconnections():
+    """Two-group sweep, no churn: every disconnection is predictable, so
+    OULD-MP must out-serve snapshot OULD on deadline misses (Fig. 13)."""
+    scn = SwarmScenario(arrival_rate_hz=0.3)   # mobility fade only
+    mp = simulate(scn, "ould_mp", seed=0)
+    snap = simulate(scn, "ould", seed=0)
+    assert mp.deadline_miss_rate < snap.deadline_miss_rate
+
+
+# ---------------------------------------------------------------------------
+# incremental solver
+# ---------------------------------------------------------------------------
+
+def _inc_setup(seed=0, n=10, requests=8):
+    prof = lenet_profile()
+    mob = MultiGroupMobility(RPGParams(n_uavs=n, area_m=300.0), n_groups=2,
+                             seed=seed)
+    pos = mob.positions(40, seed=seed + 1)
+    rng = np.random.default_rng(seed)
+    src = rng.integers(0, 3, requests).astype(np.int64)
+    inc = IncrementalSolver(prof, np.full(n, 192 * MB), np.full(n, 95e9),
+                            np.full(n, 9.5e9), solver="dp")
+    return prof, pos, src, inc
+
+
+def test_warm_resolve_noop_keeps_everything():
+    prof, pos, src, inc = _inc_setup()
+    rates = rate_matrix(pos[0])
+    sol0, _ = inc.solve(rates, src)
+    sol1, st = inc.resolve(rates, src)
+    assert st.n_replaced == 0 and st.n_kept == len(src)
+    np.testing.assert_array_equal(sol0.assign, sol1.assign)
+    assert sol1.objective == pytest.approx(sol0.objective, rel=1e-12)
+
+
+def test_warm_resolve_matches_cold_objective_on_full_change():
+    prof, pos, src, inc = _inc_setup()
+    inc.solve(rate_matrix(pos[0]), src)
+    new_rates = rate_matrix(pos[30])           # everything drifted
+    warm, st = inc.resolve(new_rates, src)
+    cold = solve_ould(Problem(prof, np.full(10, 192 * MB), np.full(10, 95e9),
+                              new_rates, src, np.full(10, 9.5e9)),
+                      solver="dp")
+    assert st.n_kept == 0                      # all links moved
+    np.testing.assert_array_equal(warm.assign, cold.assign)
+    assert warm.objective == pytest.approx(cold.objective, rel=1e-12)
+
+
+def test_warm_resolve_repacks_on_departure():
+    """A departed stream's freed capacity must be re-offered: survivors
+    sourced at (or placed on) its nodes re-place instead of keeping a stale
+    offload.  Two streams share source node 0, which fits exactly one; when
+    the locally-placed one departs, the offloaded survivor must come home."""
+    prof = ModelProfile("toy", tuple(
+        LayerProfile(f"l{j}", 10.0, 1.0, 4.0) for j in range(4)),
+        input_bytes=16.0)
+    rng = np.random.default_rng(1)
+    pos = rng.uniform(0, 60, (3, 3))
+    pos[:, 2] = 50.0
+    rates = rate_matrix(pos)
+    inc = IncrementalSolver(prof, np.full(3, 40.0), np.full(3, 1e9),
+                            solver="dp")
+    src = np.zeros(2, np.int64)                 # both sourced at node 0
+    sol0, _ = inc.solve(rates, src)
+    assert (sol0.assign[0] == 0).all()          # stream 0 serves locally
+    assert not (sol0.assign[1] == 0).all()      # stream 1 spilled elsewhere
+    warm, st = inc.resolve(rates, src[1:], request_ids=[1])  # stream 0 gone
+    assert st.n_replaced == 1                   # freed node 0 re-offered
+    assert (warm.assign[0] == 0).all()          # survivor came home
+    assert warm.objective == pytest.approx(0.0, abs=1e-12)
+
+
+def test_warm_resolve_respects_alive_mask():
+    prof, pos, src, inc = _inc_setup()
+    rates = rate_matrix(pos[0])
+    sol0, _ = inc.solve(rates, src)
+    dead = int(sol0.assign[sol0.admitted].max())   # kill a used node
+    alive = np.ones(10, bool)
+    alive[dead] = False
+    warm, _ = inc.resolve(rates, src, alive=alive)
+    for r in range(len(src)):
+        if warm.admitted[r]:
+            assert dead not in warm.assign[r]
+
+
+def test_constraint_cache_reused_for_ilp():
+    prof = ModelProfile("toy", tuple(
+        LayerProfile(f"l{j}", 10.0, 1.0, [8.0, 4.0, 2.0, 1.0][j])
+        for j in range(4)), input_bytes=16.0)
+    rng = np.random.default_rng(0)
+    pos = rng.uniform(0, 80, (3, 3))
+    pos[:, 2] = 50.0
+    inc = IncrementalSolver(prof, np.full(3, 30.0), np.full(3, 1e9),
+                            solver="ilp")
+    src = np.arange(2, dtype=np.int64) % 3
+    a, _ = inc.solve(rate_matrix(pos), src)
+    assert len(inc.constraint_cache) == 1
+    b, _ = inc.resolve(rate_matrix(pos) * 1.3, src)   # same shape → cache hit
+    assert len(inc.constraint_cache) == 1
+    assert a.objective == pytest.approx(b.objective / 1.0, rel=0.5)
+
+
+# ---------------------------------------------------------------------------
+# rejected-request accounting (the -1 sentinel)
+# ---------------------------------------------------------------------------
+
+def _tiny_problem():
+    prof = ModelProfile("toy", tuple(
+        LayerProfile(f"l{j}", 10.0, 1.0, 4.0) for j in range(4)),
+        input_bytes=16.0)
+    rng = np.random.default_rng(0)
+    pos = rng.uniform(0, 80, (3, 3))
+    pos[:, 2] = 50.0
+    # 2 requests × 40B > 3 nodes × 20B ⇒ rejection guaranteed
+    return Problem(prof, np.full(3, 20.0), np.full(3, 1e9),
+                   rate_matrix(pos), np.zeros(2, np.int64))
+
+
+@pytest.mark.parametrize("kind", ["nearest", "hrm", "nearest_hrm"])
+def test_heuristic_rejected_rows_carry_sentinel(kind):
+    sol = solve_heuristic(_tiny_problem(), kind)
+    assert not sol.admitted.all()
+    for r in np.flatnonzero(~sol.admitted):
+        assert (sol.assign[r] == -1).all()
+    assert evaluate(_tiny_problem(), sol).feasible
+
+
+def test_solver_rejected_rows_carry_sentinel():
+    prob = _tiny_problem()
+    for sol in (solve_ould(prob), solve_ould(prob, solver="dp")):
+        assert not sol.admitted.all()
+        for r in np.flatnonzero(~sol.admitted):
+            assert (sol.assign[r] == -1).all()
+
+
+def test_evaluate_rejects_sentinel_marked_admitted():
+    prob = _tiny_problem()
+    bad = Solution(np.full((2, 4), -1, np.int64), 0.0, "feasible", 0.0,
+                   np.ones(2, bool))
+    with pytest.raises(AssertionError, match="sentinel"):
+        evaluate(prob, bad)
