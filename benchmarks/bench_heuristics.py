@@ -1,45 +1,45 @@
 """Paper Fig. 8: OULD vs the three heuristics (Nearest / HRM / Nearest-HRM)
-on a single fixed-snapshot configuration.
+on a single fixed-snapshot configuration — pure iteration over the planner
+registry; no method-specific call signatures.
 
 Claims: OULD latency ≤ every heuristic at every load (it is the optimum);
 Nearest beats the memory-driven heuristics (air-to-air rates dominate)."""
 
 from __future__ import annotations
 
-import numpy as np
-
-from repro.core import evaluate, solve_heuristic, solve_ould
+from repro.core import SnapshotView, get_planner
 
 from .common import HIGH_MEM, Csv, snapshot_problem, timed
+
+METHODS = ("ould-ilp", "nearest", "hrm", "nearest-hrm")
 
 
 def run(csv: Csv) -> dict:
     loads = [2, 6, 10, 14]
-    methods = ["ould", "nearest", "hrm", "nearest_hrm"]
-    res = {m: {"lat": [], "shared": []} for m in methods}
+    # One option dict configures the whole sweep; heuristics ignore the
+    # ILP tolerances they don't consume.
+    planners = {m: get_planner(m, mip_rel_gap=1e-4, time_limit=30.0)
+                for m in METHODS}
+    res = {m: {"lat": [], "shared": []} for m in METHODS}
     optimal_everywhere = True
     nearest_wins = 0
     for r in loads:
         prob = snapshot_problem("lenet", 12, r, mem=HIGH_MEM, seed=3)
         evs = {}
-        for m in methods:
-            if m == "ould":
-                sol, us = timed(solve_ould, prob, mip_rel_gap=1e-4,
-                                time_limit=30.0)
-            else:
-                sol, us = timed(solve_heuristic, prob, m)
-            ev = evaluate(prob, sol)
+        for m, planner in planners.items():
+            plan, us = timed(planner.plan, prob, SnapshotView(prob.rates))
+            ev = plan.evaluate()
             evs[m] = ev
             res[m]["lat"].append(ev.avg_latency_per_request)
             res[m]["shared"].append(ev.shared_bytes / 1e6)
-            csv.add(f"heuristics/{m}/R{r}", us,
+            csv.add(f"heuristics/{plan.planner_name}/R{r}", us,
                     f"lat={ev.avg_latency_per_request:.4f}s "
                     f"adm={ev.n_admitted}")
-        full = [m for m in methods if evs[m].n_admitted == r]
-        if "ould" in full:
+        full = [m for m in METHODS if evs[m].n_admitted == r]
+        if "ould-ilp" in full:
             for m in full:
                 if evs[m].avg_latency_per_request < \
-                        evs["ould"].avg_latency_per_request - 1e-9:
+                        evs["ould-ilp"].avg_latency_per_request - 1e-9:
                     optimal_everywhere = False
         if ("nearest" in full and "hrm" in full and
                 evs["nearest"].avg_latency_per_request

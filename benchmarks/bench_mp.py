@@ -1,6 +1,9 @@
 """Paper Fig. 9–13: OULD-MP (mobility prediction) under non-homogeneous
 swarm motion, areas 100² and 500² m², LeNet and VGG-16 — and the Fig. 13
-comparison against the offline-fixed distribution of [32].
+comparison against the offline-fixed distribution of [32].  Both strategies
+come from the planner registry: ``ould-mp`` plans once over the predicted
+horizon; the offline-fixed baseline is ``ould-ilp`` on the t=0 snapshot
+held while the swarm moves.
 
 Claims:
   M1  per-step latency of OULD-MP is stable across the horizon (one policy
@@ -13,55 +16,61 @@ Claims:
 
 from __future__ import annotations
 
+import dataclasses
+
 import numpy as np
 
-from repro.core import solve_offline_fixed, solve_ould_mp
+from repro.core import HorizonView, Problem, SnapshotView, get_planner
 
-from .common import (COMP_CAP, GFLOPS, HIGH_MEM, LOW_MEM, PROFILES, Csv,
-                     make_network, timed)
+from .common import COMP_CAP, GFLOPS, HIGH_MEM, LOW_MEM, PROFILES, Csv, \
+    make_network, timed
 
 
-def _mp(model: str, n_uavs: int, mem: float, area: float, horizon: int,
-        seed: int = 0, solver: str = "ilp"):
+def _instance(model: str, n_uavs: int, mem: float, area: float, horizon: int,
+              seed: int = 0) -> Problem:
+    """The horizon instance: predicted (T, N, N) rates + hotspot sources."""
     mob = make_network(n_uavs, area, seed=seed, homogeneous=False)
     rng = np.random.default_rng(seed)
     sources = rng.integers(0, 3, 4).astype(np.int64)  # hotspot sources
-    kw = dict(mem_cap=np.full(n_uavs, mem), comp_cap=np.full(n_uavs, COMP_CAP),
-              sources=sources, mobility=mob, horizon=horizon,
-              compute_speed=np.full(n_uavs, GFLOPS), solver=solver,
-              mip_rel_gap=1e-4, time_limit=30.0)
-    if solver == "dp":
-        kw.pop("mip_rel_gap"), kw.pop("time_limit")
-    return kw
+    rates = mob.predicted_rates(horizon)
+    return Problem(PROFILES[model], np.full(n_uavs, mem),
+                   np.full(n_uavs, COMP_CAP), rates, sources,
+                   compute_speed=np.full(n_uavs, GFLOPS))
 
 
 def run(csv: Csv) -> dict:
     res = {}
-    for model, area, mem, solver in [
-        ("lenet", 100.0, HIGH_MEM, "ilp"), ("lenet", 100.0, LOW_MEM, "ilp"),
-        ("lenet", 500.0, HIGH_MEM, "ilp"),
-        ("vgg16", 100.0, HIGH_MEM, "ilp"), ("vgg16", 500.0, HIGH_MEM, "ilp"),
+    mp_planner = get_planner("ould-mp", mip_rel_gap=1e-4, time_limit=30.0)
+    for model, area, mem in [
+        ("lenet", 100.0, HIGH_MEM), ("lenet", 100.0, LOW_MEM),
+        ("lenet", 500.0, HIGH_MEM),
+        ("vgg16", 100.0, HIGH_MEM), ("vgg16", 500.0, HIGH_MEM),
     ]:
         tag = (f"{model}_{int(area)}m_"
                f"{'hi' if mem == HIGH_MEM else 'lo'}mem")
-        kw = _mp(model, 10, mem, area, horizon=6, solver=solver)
-        mp, us = timed(solve_ould_mp, PROFILES[model], **kw)
-        lat = [e.avg_latency_per_request for e in mp.per_step]
+        prob = _instance(model, 10, mem, area, horizon=6)
+        plan, us = timed(mp_planner.plan, prob, HorizonView(prob.rates))
+        lat = [e.avg_latency_per_request for e in plan.evaluate_per_step()]
         res[tag] = lat
         finite = [x for x in lat if np.isfinite(x)]
         csv.add(f"mp/{tag}", us,
                 f"lat_steps={['%.3f' % x for x in lat]} "
                 f"stable={max(finite) - min(finite) < 1.0 if finite else False}")
 
-    # Fig. 13: OULD-MP vs offline-fixed [32] on a drifting swarm
-    kw = _mp("lenet", 10, HIGH_MEM, 300.0, horizon=10, seed=7)
-    mp, us1 = timed(solve_ould_mp, PROFILES["lenet"], **kw)
-    off, us2 = timed(solve_offline_fixed, PROFILES["lenet"], **kw)
-    mp_lat = [e.avg_latency_per_request for e in mp.per_step]
-    off_lat = [e.avg_latency_per_request for e in off.per_step]
+    # Fig. 13: OULD-MP vs offline-fixed [32] on a drifting swarm — the
+    # baseline is the snapshot planner at t=0 with its placement held.
+    prob = _instance("lenet", 10, HIGH_MEM, 300.0, horizon=10, seed=7)
+    mp, us1 = timed(mp_planner.plan, prob, HorizonView(prob.rates))
+    off_planner = get_planner("ould-ilp", mip_rel_gap=1e-4, time_limit=30.0)
+    prob0 = dataclasses.replace(prob, rates=prob.rates[0])
+    off, us2 = timed(off_planner.plan, prob0, SnapshotView(prob.rates[0]))
+    mp_lat = [e.avg_latency_per_request for e in mp.evaluate_per_step()]
+    off_lat = [e.avg_latency_per_request
+               for e in off.evaluate_per_step(prob.rates)]
     mp_bad = sum(not np.isfinite(x) or x > 1e3 for x in mp_lat)
     off_bad = sum(not np.isfinite(x) or x > 1e3 for x in off_lat)
     csv.add("mp/vs_offline_fig13", us1 + us2,
+            f"mp={mp.planner_name} offline={off.planner_name} "
             f"mp_outage_steps={mp_bad} offline_outage_steps={off_bad} "
             f"M2_mp_survives={mp_bad <= off_bad}")
     res["fig13"] = {"mp": mp_lat, "offline": off_lat}

@@ -12,25 +12,20 @@ Claims validated (EXPERIMENTS.md §Reproduction):
 
 from __future__ import annotations
 
-import numpy as np
-
-from repro.core import evaluate, solve_ould
+from repro.core import SnapshotView, get_planner
 
 from .common import HIGH_MEM, LOW_MEM, Csv, snapshot_problem, timed
 
 
 def sweep(csv: Csv, model: str, n_uavs: int, mem: float, loads: list[int],
-          solver: str = "ilp") -> dict:
+          planner_name: str = "ould-ilp") -> dict:
     tag = f"{model}_N{n_uavs}_{'hi' if mem == HIGH_MEM else 'lo'}mem"
     out = {"load": [], "avg_latency": [], "shared_mb": [], "admitted": []}
+    planner = get_planner(planner_name, mip_rel_gap=1e-3, time_limit=45.0)
     for r in loads:
         prob = snapshot_problem(model, n_uavs, r, mem=mem)
-        if solver == "ilp":
-            sol, us = timed(solve_ould, prob, solver=solver,
-                            mip_rel_gap=1e-3, time_limit=45.0)
-        else:
-            sol, us = timed(solve_ould, prob, solver=solver)
-        ev = evaluate(prob, sol)
+        plan, us = timed(planner.plan, prob, SnapshotView(prob.rates))
+        ev = plan.evaluate()
         out["load"].append(r)
         out["avg_latency"].append(ev.avg_latency_per_request)
         out["shared_mb"].append(ev.shared_bytes / 1e6)

@@ -1,6 +1,10 @@
 """Event-driven swarm serving: streaming requests on a moving, churning swarm.
 
-The first workload where OULD-MP's horizon objective measurably pays off.
+The scenario matrix is pure iteration over the planner registry — pass any
+set of registered strategy names:
+
+    PYTHONPATH=src python -m benchmarks.bench_swarm \\
+        --planners incremental,ould-mp,nearest
 
 Claims:
   S1  on a churn scenario (two RPG groups converge/diverge past max_range,
@@ -11,15 +15,21 @@ Claims:
       cold solves ≥ 2× faster (cached constraint structure + touched-request
       re-placement) on a slow-drift scenario;
   S3  every epoch's placement respects the capacity constraints (Eq. 4/5)
-      for every policy — churn and mobility never break feasibility.
+      for every policy — churn and mobility never break feasibility;
+  S4  changed-row re-pricing of the transfer-cost matrix
+      (``incremental_transfer_cost``) is bit-identical to full pricing and
+      ≥ 2× faster when drift is localized (ROADMAP: N ≥ 50 swarms).
 """
 
 from __future__ import annotations
 
+import time
+
 import numpy as np
 
-from repro.runtime.swarm import (SwarmScenario, compare_policies, simulate,
-                                 warm_vs_cold)
+from repro.core import incremental_transfer_cost, transfer_cost
+from repro.runtime.swarm import (PLANNER_POLICIES, SwarmScenario,
+                                 compare_policies, warm_vs_cold)
 
 from .common import Csv
 
@@ -33,15 +43,66 @@ DRIFT = SwarmScenario(arrival_rate_hz=0.4, hold_ticks_mean=45.0,
                       mem_mb_hotspot_group=512.0, homogeneous=True,
                       epoch_ticks=2, rel_change=0.25, leader_speed_mps=1.0)
 
-def run(csv: Csv, quick: bool = False) -> dict:
-    res: dict = {}
+QUICK_PLANNERS = ("incremental", "ould-mp", "nearest")
 
+
+def _microbench_pricing(csv: Csv, quick: bool) -> dict:
+    """S4: re-price only changed rows vs full horizon pricing."""
+    # The regime the ROADMAP names (N ≥ 50, localized drift) — quick mode
+    # trims repetitions, not the instance: smaller N can't amortize the
+    # fixed costs (mask copy + gather) the entry win is measured against.
+    n, t, moved = 128, 12, 5
+    reps = 10 if quick else 40
+    rng = np.random.default_rng(0)
+    ref = rng.uniform(1e6, 1e8, (t, n, n))
+    ref[:, np.arange(n), np.arange(n)] = np.inf
+    new = ref.copy()
+    idx = rng.choice(n, moved, replace=False)     # localized drift: c ≪ N
+    new[:, idx, :] *= 1.3
+    new[:, :, idx] *= 1.3
+    new[:, np.arange(n), np.arange(n)] = np.inf
+    ref_spb = transfer_cost(ref)
+
+    # The hint a churn-aware caller has: exactly which nodes moved.
+    hint = np.zeros((n, n), bool)
+    hint[idx, :] = True
+    hint[:, idx] = True
+
+    full_t, inc_t, hint_t = [], [], []
+    for _ in range(reps):                         # min-of-N: noise robust
+        t0 = time.perf_counter()
+        full = transfer_cost(new)
+        full_t.append(time.perf_counter() - t0)
+        t0 = time.perf_counter()
+        spb, repriced = incremental_transfer_cost(new, ref, ref_spb)
+        inc_t.append(time.perf_counter() - t0)
+        t0 = time.perf_counter()
+        spb_h, _ = incremental_transfer_cost(new, ref, ref_spb,
+                                             repriced=hint)
+        hint_t.append(time.perf_counter() - t0)
+    full_s, inc_s, hint_s = min(full_t), min(inc_t), min(hint_t)
+
+    exact = bool(np.array_equal(full, spb) and np.array_equal(full, spb_h))
+    detect_x = full_s / max(inc_s, 1e-12)
+    hint_x = full_s / max(hint_s, 1e-12)
+    s4 = exact and detect_x >= 1.2 and hint_x >= 2.0
+    csv.add("swarm/claims/S4_incremental_pricing", inc_s * 1e6,
+            f"N={n} T={t} entries={int(repriced.sum())}/{n * n} "
+            f"full={full_s * 1e6:.0f}us detected={detect_x:.1f}x "
+            f"hinted={hint_x:.1f}x bit_identical={exact} holds={s4}")
+    assert exact, "S4: incremental pricing must be bit-identical"
+    return {"detected_speedup": detect_x, "hinted_speedup": hint_x,
+            "bit_identical": exact, "entries_repriced": int(repriced.sum())}
+
+
+def run(csv: Csv, quick: bool = False, planners=None) -> dict:
+    res: dict = {}
     # --- S1/S3: policy comparison on the churn scenario --------------------
     # quick mode trims the policy set, not the horizon: the MP advantage
     # needs the full converge→diverge sweep of the two groups.
-    policies = (("ould", "ould_mp", "nearest") if quick else
-                ("ould", "ould_mp", "nearest", "hrm", "nearest_hrm"))
-    results = compare_policies(CHURN, seed=0, policies=policies)
+    planners = tuple(planners) if planners else (
+        QUICK_PLANNERS if quick else PLANNER_POLICIES)
+    results = compare_policies(CHURN, seed=0, policies=planners)
     for pol, r in results.items():
         csv.add(f"swarm/churn/{pol}", r.total_resolve_s * 1e6,
                 f"miss={r.deadline_miss_rate:.3f} rej={r.rejection_rate:.3f} "
@@ -49,12 +110,14 @@ def run(csv: Csv, quick: bool = False) -> dict:
         res[pol] = {"miss": r.deadline_miss_rate, "rej": r.rejection_rate,
                     "lat": r.avg_latency_s}
         assert all(e.feasible for e in r.epochs), f"S3 violated: {pol}"
-    s1 = (results["ould_mp"].deadline_miss_rate
-          < results["ould"].deadline_miss_rate)
-    csv.add("swarm/claims/S1_mp_beats_snapshot", 0.0,
-            f"mp_miss={results['ould_mp'].deadline_miss_rate:.3f} "
-            f"ould_miss={results['ould'].deadline_miss_rate:.3f} holds={s1}")
-    assert s1, "S1: OULD-MP should out-serve snapshot OULD under churn"
+    if {"incremental", "ould-mp"} <= set(results):
+        s1 = (results["ould-mp"].deadline_miss_rate
+              < results["incremental"].deadline_miss_rate)
+        csv.add("swarm/claims/S1_mp_beats_snapshot", 0.0,
+                f"mp_miss={results['ould-mp'].deadline_miss_rate:.3f} "
+                f"ould_miss={results['incremental'].deadline_miss_rate:.3f} "
+                f"holds={s1}")
+        assert s1, "S1: OULD-MP should out-serve snapshot OULD under churn"
 
     # --- S2: warm vs cold epoch re-solves ----------------------------------
     trials = 2 if quick else 5
@@ -76,4 +139,25 @@ def run(csv: Csv, quick: bool = False) -> dict:
     if not quick:
         assert s2, (f"S2: warm re-solve speedup {speedup:.2f}x "
                     f"(obj ratio {max(obj):.4f})")
+
+    # --- S4: incremental transfer-cost pricing -----------------------------
+    res["incremental_pricing"] = _microbench_pricing(csv, quick)
     return res
+
+
+def main() -> None:
+    import argparse
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--planners", default=None,
+                    help="comma-separated registry names "
+                         "(default: " + ",".join(PLANNER_POLICIES) + ")")
+    ap.add_argument("--quick", action="store_true")
+    args = ap.parse_args()
+    names = args.planners.split(",") if args.planners else None
+    csv = Csv()
+    print("name,us_per_call,derived")
+    run(csv, quick=args.quick, planners=names)
+
+
+if __name__ == "__main__":
+    main()

@@ -4,13 +4,18 @@ distributed CNN inference on captured frames.
 Pipeline (all real computation, simulated radio):
   1. RPG mobility places 10 UAVs over the target area; Eq.(1) rates derived
      from SINR/path-loss.
-  2. Frames arrive at hotspot UAVs → OULD (the paper's ILP) places each
-     request's LeNet layers across the swarm under 512 MB / 9.5 GFLOPS caps.
+  2. Frames arrive at hotspot UAVs → the chosen placement planner (the
+     paper's OULD ILP by default) places each request's LeNet layers across
+     the swarm under 512 MB / 9.5 GFLOPS caps.
   3. Each request executes for real: the JAX LeNet runs layer ranges per
      stage; activations "transmitted" between UAVs are accounted against
      the link rates to produce the end-to-end latency the paper plots.
-  4. OULD-MP re-plans once for the whole predicted horizon and the run
-     repeats while the swarm moves.
+  4. The horizon strategy (ould-mp) re-plans once for the whole predicted
+     horizon and the run repeats while the swarm moves.
+
+Every strategy goes through the registry (`repro.core.get_planner`), and all
+printed strategy labels come from `Plan.planner_name` — the output stays
+truthful as planners are added.
 
     PYTHONPATH=src python examples/uav_surveillance.py
 """
@@ -19,8 +24,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import (Problem, evaluate, lenet_profile, solve_ould,
-                        solve_ould_mp, to_stages)
+from repro.core import (HorizonView, Problem, SnapshotView, get_planner,
+                        lenet_profile)
 from repro.core.mobility import RPGMobility, RPGParams
 from repro.core.radio import RadioParams, rate_matrix
 from repro.models import cnn
@@ -59,9 +64,11 @@ def main() -> None:
     prob = Problem(profile, mem_cap=np.full(10, 128 * MB),
                    comp_cap=np.full(10, 95e9), rates=rates, sources=sources,
                    compute_speed=np.full(10, 9.5e9))
-    sol = solve_ould(prob, mip_rel_gap=1e-4, time_limit=20.0)
-    ev = evaluate(prob, sol)
-    print(f"OULD: {sol.status}, admitted {ev.n_admitted}/{requests}, "
+    planner = get_planner("ould-ilp", mip_rel_gap=1e-4, time_limit=20.0)
+    plan = planner.plan(prob, SnapshotView(rates))
+    ev = plan.evaluate()
+    print(f"{plan.planner_name}: {plan.status}, "
+          f"admitted {ev.n_admitted}/{requests}, "
           f"avg latency {ev.avg_latency_per_request:.3f}s, "
           f"shared {ev.shared_bytes / MB:.1f} MB")
 
@@ -69,9 +76,9 @@ def main() -> None:
     k_bytes = profile.output_vector()
     frames = rng.standard_normal((requests, 326, 595, 3)).astype(np.float32)
     for r in range(requests):
-        if not sol.admitted[r]:
+        if not plan.admitted[r]:
             continue
-        stages = to_stages(sol.assign[r])
+        stages = plan.stages(r)
         logits, t_comm = execute_placed(layer_fns, jnp.asarray(frames[r:r+1]),
                                         stages, spb, profile.input_bytes,
                                         k_bytes)
@@ -80,22 +87,28 @@ def main() -> None:
         print(f"  request {r}: class={cls} route=[{route}] "
               f"comm={t_comm * 1e3:.2f}ms")
 
-    # OULD-MP over a 5-step horizon while the swarm moves
-    mp = solve_ould_mp(profile, np.full(10, 256 * MB), np.full(10, 95e9),
-                       sources, mob, horizon=5,
-                       compute_speed=np.full(10, 9.5e9),
-                       mip_rel_gap=1e-3, time_limit=20.0)
-    lat = [f"{e.avg_latency_per_request:.3f}" for e in mp.per_step]
-    print(f"OULD-MP one-shot plan, per-step latency over horizon: {lat}")
+    # The horizon strategy over 5 predicted steps while the swarm moves:
+    # one placement judged against each realized step's snapshot.
+    horizon = 5
+    pred = mob.predicted_rates(horizon)
+    mp_prob = Problem(profile, np.full(10, 256 * MB), np.full(10, 95e9),
+                      pred, sources, compute_speed=np.full(10, 9.5e9))
+    mp_planner = get_planner("ould-mp", mip_rel_gap=1e-3, time_limit=20.0)
+    mp_plan = mp_planner.plan(mp_prob, HorizonView(pred))
+    lat = [f"{e.avg_latency_per_request:.3f}"
+           for e in mp_plan.evaluate_per_step()]
+    print(f"{mp_plan.planner_name} one-shot plan, per-step latency over "
+          f"horizon: {lat}")
 
     # Streaming scenario: Poisson request arrivals on a two-group swarm whose
-    # inter-group links fade in and out of range, plus node churn — epoch
-    # re-placement with warm-started incremental OULD re-solves.
+    # inter-group links fade in and out of range, plus node churn — every
+    # policy is a registry name; 'incremental' is warm-started snapshot OULD.
     scn = SwarmScenario(arrival_rate_hz=0.3, duration_ticks=90,
                         mtbf_s=60.0, mttr_s=20.0)
-    for policy in ("ould", "ould_mp", "nearest"):
+    for policy in ("incremental", "ould-mp", "nearest"):
         r = simulate(scn, policy, seed=0)
-        print(f"swarm[{policy:8s}]: deadline_miss={r.deadline_miss_rate:.3f} "
+        print(f"swarm[{r.policy:12s}]: "
+              f"deadline_miss={r.deadline_miss_rate:.3f} "
               f"rejected={r.rejection_rate:.3f} "
               f"avg_latency={r.avg_latency_s:.3f}s "
               f"resolve_total={r.total_resolve_s * 1e3:.1f}ms")

@@ -9,23 +9,29 @@ from .heuristics import solve_heuristic
 from .latency import Evaluation, evaluate
 from .mobility import MultiGroupMobility, RPGMobility, RPGParams
 from .ould import (IncrementalSolver, Problem, ResolveStats, Solution,
-                   solve_ould)
+                   incremental_transfer_cost, solve_ould, transfer_cost)
 from .ould_mp import (MPResult, solve_offline_fixed, solve_ould_mp,
                       solve_static_resolve)
 from .placement import (Stage, balanced_stages, ould_pipeline_stages,
                         stage_boundaries, to_stages)
+from .planner import (HorizonView, IncrementalPlanner, Plan, Planner,
+                      SnapshotView, TopologyView, available_planners,
+                      get_planner, make_view, register_planner)
 from .profiles import (LayerProfile, ModelProfile, lenet_profile, lm_profile,
                        vgg16_profile)
 from .radio import RadioParams, TpuLinkModel, rate_matrix, sinr_matrix
 
 __all__ = [
     "ChurnEvent", "Evaluation", "Event", "EventKind", "EventQueue",
-    "IncrementalSolver", "LayerProfile", "MPResult", "ModelProfile",
-    "MultiGroupMobility", "Problem", "RPGMobility", "RPGParams",
-    "RadioParams", "ResolveStats", "Solution", "Stage", "TpuLinkModel",
-    "balanced_stages", "churn_events", "evaluate", "lenet_profile",
-    "lm_profile", "ould_pipeline_stages", "poisson_process", "rate_matrix",
-    "sinr_matrix", "solve_heuristic", "solve_offline_fixed", "solve_ould",
-    "solve_ould_mp", "solve_static_resolve", "stage_boundaries", "to_stages",
+    "HorizonView", "IncrementalPlanner", "IncrementalSolver", "LayerProfile",
+    "MPResult", "ModelProfile", "MultiGroupMobility", "Plan", "Planner",
+    "Problem", "RPGMobility", "RPGParams", "RadioParams", "ResolveStats",
+    "SnapshotView", "Solution", "Stage", "TopologyView", "TpuLinkModel",
+    "available_planners", "balanced_stages", "churn_events", "evaluate",
+    "get_planner", "incremental_transfer_cost", "lenet_profile",
+    "lm_profile", "make_view", "ould_pipeline_stages", "poisson_process",
+    "rate_matrix", "register_planner", "sinr_matrix", "solve_heuristic",
+    "solve_offline_fixed", "solve_ould", "solve_ould_mp",
+    "solve_static_resolve", "stage_boundaries", "to_stages", "transfer_cost",
     "vgg16_profile",
 ]

@@ -49,7 +49,10 @@ _PICKERS: dict[str, Callable[..., int]] = {
 
 
 def solve_heuristic(prob: Problem, kind: Heuristic) -> Solution:
-    """Greedy hand-off placement.  'Distance' is derived from the rate matrix
+    """Greedy hand-off placement (legacy entry point — new code uses
+    ``get_planner("nearest" | "hrm" | "nearest-hrm")``).
+
+    'Distance' is derived from the rate matrix
     (higher rate ⇔ nearer — §III-C: 'lower data rates correspond to distant
     UAVs and vice-versa'), so the heuristics see exactly the information a
     real swarm would estimate from its links."""

@@ -85,15 +85,75 @@ class Problem:
     def transfer_cost(self) -> np.ndarray:
         """(N,N) seconds per byte between node pairs, summed over the horizon
         (Eq. 14 sums transfer latency over t ∈ {1..T})."""
-        rates = self.rates[None] if self.rates.ndim == 2 else self.rates
-        secs_per_byte = np.zeros(rates.shape[1:])
-        for t in range(rates.shape[0]):
-            r = rates[t]
-            with np.errstate(divide="ignore"):
-                spb = np.where(r > 0, (1.0 / self.rate_unit_bytes) / np.maximum(r, 1e-30), _BIG)
-            np.fill_diagonal(spb, 0.0)  # same node: no transfer
-            secs_per_byte = secs_per_byte + spb
-        return secs_per_byte
+        return transfer_cost(self.rates, self.rate_unit_bytes)
+
+
+def transfer_cost(rates: np.ndarray,
+                  rate_unit_bytes: float = 1 / 8.0) -> np.ndarray:
+    """Full (N,N) seconds/byte pricing of a rate matrix or horizon stack."""
+    r3 = rates[None] if rates.ndim == 2 else rates
+    secs_per_byte = np.zeros(r3.shape[1:])
+    for t in range(r3.shape[0]):
+        r = r3[t]
+        with np.errstate(divide="ignore"):
+            spb = np.where(r > 0, (1.0 / rate_unit_bytes) / np.maximum(r, 1e-30), _BIG)
+        np.fill_diagonal(spb, 0.0)  # same node: no transfer
+        secs_per_byte = secs_per_byte + spb
+    return secs_per_byte
+
+
+def incremental_transfer_cost(
+        rates: np.ndarray, ref_rates: np.ndarray, ref_spb: np.ndarray, *,
+        rel_change: float = 0.0, rate_unit_bytes: float = 1 / 8.0,
+        repriced: np.ndarray | None = None) -> tuple[np.ndarray, np.ndarray]:
+    """Re-price only entries of the seconds/byte matrix whose rates moved
+    (beyond ``rel_change`` relative drift; 0.0 ⇒ exact: any change at all).
+
+    ``ref_rates``/``ref_spb`` are the rates each entry was last priced at
+    and the matching cost matrix.  Returns ``(spb, repriced)`` with
+    ``repriced`` the (N, N) bool mask of re-priced pairs; entries outside it
+    are carried over verbatim — at ``rel_change=0.0`` the result is
+    bit-identical to :func:`transfer_cost`.
+
+    A caller that *knows* which links moved (a churn event, one mobile
+    group) passes the pair mask as ``repriced`` and skips change detection
+    entirely — true O(T·P) for P changed pairs instead of O(T·N²).  Without
+    the hint, detection costs one pass over the tensor (still ~2× cheaper
+    than the ~5 arithmetic passes of full pricing).  The ROADMAP regime:
+    large-N swarms (N ≥ 50) with localized drift.
+    """
+    if rates.shape != ref_rates.shape:        # topology resized: full price
+        full = transfer_cost(rates, rate_unit_bytes)
+        return full, np.ones(full.shape, bool)
+    r3 = rates[None] if rates.ndim == 2 else rates
+    if repriced is None:
+        ref3 = ref_rates[None] if ref_rates.ndim == 2 else ref_rates
+        if rel_change > 0.0:
+            with np.errstate(invalid="ignore"):
+                diff = np.abs(r3 - ref3)
+            diff = np.where(np.isnan(diff), 0.0, diff)  # inf==inf: self-link
+            denom = np.maximum(np.minimum(r3, ref3), 1e-30)
+            moved = diff > rel_change * denom  # covers 0 ↔ connected flips
+        else:
+            # Exact mode: a pure equality compare (no float arithmetic)
+            # keeps detection far cheaper than the divides it saves;
+            # inf == inf on self-links, so the diagonal never trips it.
+            moved = r3 != ref3
+        repriced = moved.any(axis=0)
+    else:
+        repriced = repriced.copy()
+    np.fill_diagonal(repriced, False)         # same node: always 0 transfer
+    spb = ref_spb.copy()
+    ii, kk = np.nonzero(repriced)
+    if ii.size == 0:
+        return spb, repriced
+    unit = 1.0 / rate_unit_bytes
+    vals = np.zeros(ii.size)
+    for t in range(r3.shape[0]):
+        rv = r3[t][ii, kk]
+        vals += np.where(rv > 0, unit / np.maximum(rv, 1e-30), _BIG)
+    spb[ii, kk] = vals
+    return spb, repriced
 
 
 @dataclasses.dataclass
@@ -442,6 +502,10 @@ def solve_ould(prob: Problem, *, solver: Solver = "ilp",
                max_path_cost: float | None = None) -> Solution:
     """Solve an OULD / OULD-MP instance.
 
+    Legacy entry point (kept for one release): new code goes through the
+    planner registry — ``get_planner("ould-ilp" | "ould-dp" | "ould-mp")``
+    — which wraps this engine with view checking and provenance.
+
     When the full request set is infeasible (system over capacity), requests
     are shed from the tail until feasible — the paper's 'additional incoming
     requests are rejected' behaviour (§IV-A, shared-data plateaus).  Rejected
@@ -497,6 +561,7 @@ class ResolveStats:
     n_changed_nodes: int   # nodes incident to a materially changed link
     cold: bool             # True when the solve fell back to a full solve
     solve_time_s: float
+    n_repriced: int = -1   # transfer-cost entries re-priced (-1: full price)
 
 
 class IncrementalSolver:
@@ -531,7 +596,8 @@ class IncrementalSolver:
                  comp_cap: np.ndarray,
                  compute_speed: np.ndarray | None = None, *,
                  solver: Solver = "dp", include_compute: bool = False,
-                 rel_change: float = 0.05, max_path_cost: float | None = None,
+                 rel_change: float = 0.05, price_rel_change: float = 0.0,
+                 max_path_cost: float | None = None,
                  rate_unit_bytes: float = 1 / 8.0, **ilp_kw):
         self.profile = profile
         self.mem_cap = np.asarray(mem_cap, float)
@@ -540,6 +606,17 @@ class IncrementalSolver:
         self.solver: Solver = solver
         self.include_compute = include_compute
         self.rel_change = rel_change
+        # Entry re-pricing threshold for incremental_transfer_cost; 0.0 keeps
+        # the cost matrix exact (only entries with *any* drift recomputed).
+        # Must not exceed rel_change: _changed_nodes reads the incrementally
+        # priced spb, so pricing staleness above the placement band would
+        # silently disable the re-place trigger for sub-band drift.
+        if price_rel_change > rel_change:
+            raise ValueError(
+                f"price_rel_change ({price_rel_change}) must be ≤ "
+                f"rel_change ({rel_change}); coarser pricing would hide "
+                f"link drift from the re-place trigger")
+        self.price_rel_change = price_rel_change
         self.max_path_cost = max_path_cost
         self.rate_unit_bytes = rate_unit_bytes
         self.ilp_kw = ilp_kw
@@ -547,6 +624,8 @@ class IncrementalSolver:
         self._paths: dict[int, np.ndarray] = {}   # request id → kept path
         self._spb: np.ndarray | None = None       # previous horizon-summed spb
         self._alive: np.ndarray | None = None
+        self._price_rates: np.ndarray | None = None  # rates rows last priced at
+        self._price_spb: np.ndarray | None = None    # matching cost matrix
 
     # -- problem assembly ---------------------------------------------------
 
@@ -609,6 +688,30 @@ class IncrementalSolver:
         self._paths = {int(rid): assign[r].copy()
                        for r, rid in enumerate(request_ids) if admitted[r]}
 
+    def _priced_spb(self, prob: Problem) -> tuple[np.ndarray, int]:
+        """Transfer-cost matrix via changed-entry re-pricing when a reference
+        exists (ROADMAP: incremental ``transfer_cost``).  Returns the matrix
+        and how many entries were re-priced (-1 ⇒ full pricing)."""
+        rates = prob.rates
+        if (self._price_spb is None or self._price_rates is None
+                or self._price_rates.shape != rates.shape):
+            spb = prob.transfer_cost()
+            self._price_rates = np.asarray(rates, float).copy()
+            self._price_spb = spb.copy()
+            return spb, -1
+        spb, repriced = incremental_transfer_cost(
+            rates, self._price_rates, self._price_spb,
+            rel_change=self.price_rel_change,
+            rate_unit_bytes=prob.rate_unit_bytes)
+        n = int(repriced.sum())
+        if n:
+            # Advance the pricing reference only for re-priced entries;
+            # entries drifting below the threshold keep their old reference
+            # so slow drift accumulates toward a re-price, never compounds.
+            self._price_rates[..., repriced] = rates[..., repriced]
+            self._price_spb = spb.copy()
+        return spb, n
+
     # -- entry points -------------------------------------------------------
 
     def solve(self, rates: np.ndarray, sources: np.ndarray,
@@ -625,10 +728,11 @@ class IncrementalSolver:
                          constraint_cache=self.constraint_cache,
                          max_path_cost=self.max_path_cost,
                          **self.ilp_kw)
-        spb = prob.transfer_cost()
+        spb, n_repriced = self._priced_spb(prob)
         self._remember(spb, alive, request_ids, sol.assign, sol.admitted)
         dt = time.perf_counter() - t0
-        return sol, ResolveStats(0, prob.n_requests, prob.n_nodes, True, dt)
+        return sol, ResolveStats(0, prob.n_requests, prob.n_nodes, True, dt,
+                                 n_repriced)
 
     def resolve(self, rates: np.ndarray, sources: np.ndarray,
                 request_ids=None,
@@ -646,7 +750,7 @@ class IncrementalSolver:
         if self.solver != "dp" or self._spb is None:
             return self.solve(rates, sources, request_ids, alive)
 
-        spb = prob.transfer_cost()
+        spb, n_repriced = self._priced_spb(prob)
         changed = self._changed_nodes(spb, alive)
         # A departed stream frees its nodes' reservations — a capacity event
         # as real as a link change: placements (and sources) on those nodes
@@ -693,8 +797,10 @@ class IncrementalSolver:
                 comp_left[i] -= comp[j]
             assign[r] = path
             admitted[r] = True
-        # Objective re-priced for EVERY admitted request under the new rates —
-        # kept paths are not assumed to still cost what they used to.
+        # Objective re-priced for EVERY admitted request — kept paths are not
+        # assumed to still cost what they used to.  The spb is exact at
+        # price_rel_change=0 (the default); otherwise entries may lag the
+        # true rates by at most one price band (≤ rel_change by contract).
         total = sum(_path_cost(spb, K, Ks, int(prob.sources[r]), assign[r],
                                compute_cost)
                     for r in range(R) if admitted[r])
@@ -705,4 +811,4 @@ class IncrementalSolver:
         sol = Solution(assign, float(total), status, dt, admitted,
                        solver="dp-warm")
         return sol, ResolveStats(n_kept, len(todo), int(changed.sum()),
-                                 False, dt)
+                                 False, dt, n_repriced)

@@ -9,6 +9,13 @@ out, so the chosen placement never relies on a link about to vanish).
 Also provides the *static re-solve* baseline the paper compares against
 (OULD executed at every time step, Fig. 13/14) and the offline-fixed
 baseline of [32] (solve once at t=0 then hold the placement).
+
+.. deprecated::
+    These mobility-model convenience wrappers are legacy shims kept for one
+    release.  New code should use the planner registry —
+    ``get_planner("ould-mp").plan(problem, HorizonView(predicted_rates))``
+    — which needs no bespoke ``rate_fn``/mobility signature (see
+    :mod:`repro.core.planner` and DESIGN.md).
 """
 
 from __future__ import annotations

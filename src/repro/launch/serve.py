@@ -1,7 +1,9 @@
 """Serving launcher: batched greedy generation with the production server
-(prefill + donated-cache decode), reduced config on CPU.
+(prefill + donated-cache decode), reduced config on CPU — plus request
+placement over the serving pool via any registered planner.
 
-    PYTHONPATH=src python -m repro.launch.serve --arch yi_6b --steps 16
+    PYTHONPATH=src python -m repro.launch.serve --arch yi_6b --steps 16 \\
+        --planner ould-dp --pool-nodes 8
 """
 
 from __future__ import annotations
@@ -15,14 +17,19 @@ def main() -> None:
     ap.add_argument("--batch", type=int, default=4)
     ap.add_argument("--prompt-len", type=int, default=16)
     ap.add_argument("--steps", type=int, default=16)
+    ap.add_argument("--planner", default="ould-dp",
+                    help="registered placement strategy for the pool "
+                         "(see repro.core.available_planners())")
+    ap.add_argument("--pool-nodes", type=int, default=8)
     args = ap.parse_args()
 
     import jax
     import numpy as np
 
     import repro.configs as C
+    from repro.core.radio import TpuLinkModel
     from repro.models import init_params
-    from repro.runtime.serve import ServeConfig, Server
+    from repro.runtime.serve import ServeConfig, Server, schedule_requests
 
     cfg = C.get_config(args.arch).reduced(n_layers=2, d_model=128, vocab=1024)
     params = init_params(jax.random.PRNGKey(0), cfg)
@@ -32,6 +39,23 @@ def main() -> None:
         0, cfg.vocab, (args.batch, args.prompt_len), dtype=np.int32)
     out = srv.generate(prompts, steps=args.steps)
     print(f"[serve] arch={args.arch} generated {out.shape}: {out[0].tolist()}")
+
+    # Place the batch's requests over a simulated pool with the chosen
+    # planner — provenance comes from the Plan, not a hard-coded label.
+    link = TpuLinkModel()
+    n = args.pool_nodes
+    coords = np.stack([np.arange(n) % link.torus[0],
+                       np.arange(n) // link.torus[0]], -1)
+    rates_bits = link.rate_matrix(coords, np.zeros(n, np.int64)) * 8.0
+    plan, ev = schedule_requests(
+        C.get_config(args.arch), n_nodes=n, requests=args.batch,
+        hbm_bytes=16e9 * 16, flops_budget=197e12 * 10,
+        rates_bits=rates_bits, planner=args.planner)
+    print(f"[serve] placement planner={plan.planner_name} "
+          f"view={plan.view_kind} status={plan.status} "
+          f"admitted={plan.n_admitted}/{args.batch} "
+          f"comm={ev.comm_latency_s * 1e6:.1f}us "
+          f"stages(req0)={len(plan.stages(0)) if plan.admitted[0] else 0}")
 
 
 if __name__ == "__main__":

@@ -17,9 +17,9 @@ import jax.numpy as jnp
 import numpy as np
 
 from ..configs.base import ModelConfig
-from ..core import Problem, evaluate, solve_ould
-from ..core.ould import IncrementalSolver, ResolveStats, Solution
-from ..core.profiles import ModelProfile, lm_profile
+from ..core import Problem, ResolveStats
+from ..core.planner import Plan, Planner, TopologyView, get_planner, make_view
+from ..core.profiles import lm_profile
 from ..models import transformer
 from . import steps as steps_mod
 
@@ -66,36 +66,38 @@ class Server:
 class AdmissionController:
     """Epoch-based admission + placement for a serving pool.
 
-    Wraps :class:`~repro.core.ould.IncrementalSolver` so repeated admission
-    rounds (the swarm simulator's epochs, or a pod's periodic re-placement
-    after stragglers/failures) are warm-started: placements of streams that
-    persist across rounds are kept unless the topology changed under them,
-    and the ILP constraint structure is cached.  One controller instance ==
-    one pool with fixed per-node capacities; per-round outages go through
-    ``alive``.
+    Strategy-agnostic: wraps any registered :class:`~repro.core.planner.
+    Planner` (by name or instance) and feeds it one :class:`TopologyView`
+    per admission round.  Stateful planners (``incremental``, warm
+    ``ould-mp``) keep placements of persistent streams across rounds and
+    cache constraint structure; stateless planners just get called.  One
+    controller instance == one pool; per-round outages go through the
+    view's ``alive`` mask.
     """
 
-    def __init__(self, profile: ModelProfile, mem_cap: np.ndarray,
-                 comp_cap: np.ndarray,
-                 compute_speed: np.ndarray | None = None, *,
-                 solver: str = "dp", rel_change: float = 0.05, **solver_kw):
-        self._inc = IncrementalSolver(
-            profile, mem_cap, comp_cap, compute_speed,
-            solver=solver, rel_change=rel_change, **solver_kw)  # type: ignore[arg-type]
+    def __init__(self, planner: Planner | str = "incremental",
+                 **planner_options):
+        self.planner: Planner = (get_planner(planner, **planner_options)
+                                 if isinstance(planner, str) else planner)
+        # Per-round solve stats only — a Plan pins its bound Problem (rate
+        # matrices), which must not accumulate over a long-running pool.
         self.history: list[ResolveStats] = []
 
-    def admit(self, rates: np.ndarray, sources: np.ndarray,
-              request_ids=None, alive: np.ndarray | None = None,
-              cold: bool = False) -> tuple[Solution, ResolveStats]:
-        """Place this round's active request set; returns (Solution, stats).
+    def admit(self, problem: Problem, view: TopologyView | np.ndarray,
+              request_ids=None) -> Plan:
+        """Place this round's active request set; returns the :class:`Plan`.
 
-        ``request_ids`` are stable stream ids (placement inheritance across
-        rounds); ``cold=True`` forces a from-scratch solve (the baseline the
-        warm path is benchmarked against)."""
-        fn = self._inc.solve if cold else self._inc.resolve
-        sol, stats = fn(rates, sources, request_ids, alive)
-        self.history.append(stats)
-        return sol, stats
+        ``view`` may be a prepared TopologyView or a raw rate array (wrapped
+        via :func:`make_view`); ``request_ids`` are stable stream ids for
+        placement inheritance across rounds (ignored by stateless planners).
+        """
+        if isinstance(view, np.ndarray):
+            view = make_view(view)
+        plan = self.planner.plan(problem, view, request_ids=request_ids)
+        self.history.append(plan.solve_stats or ResolveStats(
+            0, plan.solution.n_admitted, problem.n_nodes, True,
+            plan.solve_time_s))
+        return plan
 
     @property
     def total_solve_time_s(self) -> float:
@@ -105,10 +107,10 @@ class AdmissionController:
 def schedule_requests(cfg: ModelConfig, *, n_nodes: int, requests: int,
                       hbm_bytes: float, flops_budget: float,
                       rates_bits: np.ndarray, seq: int = 2048,
-                      solver: str = "dp") -> tuple[Any, Any]:
+                      planner: str = "ould-dp") -> tuple[Plan, Any]:
     """Place R concurrent serving requests' layer groups over the pool —
-    the paper's multi-request OULD applied to inference serving.  Returns
-    (Solution, Evaluation)."""
+    the paper's multi-request placement applied to inference serving, via
+    any registered planner.  Returns (Plan, Evaluation)."""
     profile = lm_profile(
         cfg.name, n_layers=cfg.n_layers, d_model=cfg.d_model,
         n_heads=cfg.n_heads, n_kv=cfg.n_kv, d_ff=cfg.d_ff, vocab=cfg.vocab,
@@ -119,5 +121,5 @@ def schedule_requests(cfg: ModelConfig, *, n_nodes: int, requests: int,
                    np.full(n_nodes, flops_budget), rates_bits,
                    sources.astype(np.int64),
                    compute_speed=np.full(n_nodes, 197e12))
-    sol = solve_ould(prob, solver=solver)  # type: ignore[arg-type]
-    return sol, evaluate(prob, sol)
+    plan = get_planner(planner).plan(prob, make_view(rates_bits))
+    return plan, plan.evaluate()

@@ -31,11 +31,16 @@ knob                      paper grounding
                           churn, invisible to both OULD and OULD-MP horizons
 ========================  ====================================================
 
-Policies: ``ould`` (snapshot ILP/DP re-solved each epoch, warm-started via
-:class:`~repro.core.ould.IncrementalSolver`), ``ould_mp`` (horizon objective
-over the epoch's predicted rates), and the three stateless heuristics of
-§IV-A.  All policies consume the identical event tape (same seed ⇒ same
-arrivals, holds, churn, trajectories), so per-request metrics are paired.
+Policies are registered *planners* (see :mod:`repro.core.planner`): the
+simulator's epoch loop is strategy-agnostic — it builds the richest
+:class:`~repro.core.planner.TopologyView` each planner prefers (a predicted
+horizon for ``ould-mp``, the fresh snapshot otherwise) and calls
+``plan()`` through one :class:`~repro.runtime.serve.AdmissionController`.
+``incremental`` is the warm-started snapshot OULD of PR 1; ``ould-mp`` the
+horizon objective; ``nearest``/``hrm``/``nearest-hrm`` the stateless §IV-A
+heuristics.  All policies consume the identical event tape (same seed ⇒
+same arrivals, holds, churn, trajectories), so per-request metrics are
+paired.
 """
 
 from __future__ import annotations
@@ -45,15 +50,20 @@ import dataclasses
 import numpy as np
 
 from ..core.events import EventKind, EventQueue, churn_events, poisson_process
-from ..core.heuristics import solve_heuristic
 from ..core.latency import evaluate
 from ..core.mobility import MultiGroupMobility, RPGParams
-from ..core.ould import Problem, Solution
+from ..core.ould import Problem
+from ..core.planner import SnapshotView, available_planners, make_view
 from ..core.profiles import ModelProfile, lenet_profile
 from ..core.radio import RadioParams, rate_matrix
 from .serve import AdmissionController
 
-POLICIES = ("ould", "ould_mp", "nearest", "hrm", "nearest_hrm")
+# Canonical registry names for the scenario matrix …
+PLANNER_POLICIES = ("incremental", "ould-mp", "nearest", "hrm", "nearest-hrm")
+# … and the PR-1 policy aliases they replaced (kept for one release).
+POLICY_ALIASES = {"ould": "incremental", "ould_mp": "ould-mp",
+                  "nearest_hrm": "nearest-hrm"}
+POLICIES = PLANNER_POLICIES
 
 MB = 1e6
 
@@ -192,8 +202,11 @@ def simulate(scn: SwarmScenario, policy: str, seed: int = 0, *,
     baseline the warm-started incremental path is measured against); it only
     affects solve *time*, never the event tape.
     """
-    if policy not in POLICIES:
-        raise ValueError(f"unknown policy {policy!r}; one of {POLICIES}")
+    planner_name = POLICY_ALIASES.get(policy, policy)
+    if planner_name not in available_planners():
+        raise ValueError(f"unknown policy {policy!r}; one of "
+                         f"{available_planners()} (or aliases "
+                         f"{tuple(POLICY_ALIASES)})")
     profile = profile or lenet_profile()
     rng = np.random.default_rng(seed)
     T = scn.duration_ticks
@@ -233,11 +246,14 @@ def simulate(scn: SwarmScenario, policy: str, seed: int = 0, *,
     active: dict[int, StreamRequest] = {}
     placed: dict[int, np.ndarray] = {}     # stream id → current path
     ever_admitted: set[int] = set()
-    ctrl: AdmissionController | None = None
-    if policy in ("ould", "ould_mp"):
-        ctrl = AdmissionController(profile, mem_cap, comp_cap, speed,
-                                   solver="dp", rel_change=scn.rel_change,
-                                   max_path_cost=scn.max_path_cost_s)
+    # One option dict configures every strategy (planners ignore options they
+    # don't consume) — the epoch loop below has no per-strategy branches.
+    ctrl = AdmissionController(planner_name, solver="dp",
+                               warm=not cold_resolves,
+                               rel_change=scn.rel_change,
+                               max_path_cost=scn.max_path_cost_s)
+    wants_horizon = getattr(ctrl.planner, "preferred_view",
+                            "snapshot") == "horizon"
 
     epochs: list[EpochLog] = []
     latencies: list[float] = []
@@ -252,35 +268,29 @@ def simulate(scn: SwarmScenario, policy: str, seed: int = 0, *,
             return
         sources = np.array([s.source for s in act], np.int64)
         ids = [s.id for s in act]
-        snap = _masked(rates_t[tick], alive)
-        if policy == "ould_mp":
+        if wants_horizon:     # the epoch's predicted rates (Eq. 14 horizon)
             end = min(tick + scn.epoch_ticks, T)
-            rates = _masked(np.stack(rates_t[tick:end]),
-                            alive)  # known-dead nodes priced out over horizon
-        else:
-            rates = snap
-        if ctrl is not None:
-            sol, stats = ctrl.admit(rates, sources, ids, alive,
-                                    cold=cold_resolves)
-            n_kept, n_rep = stats.n_kept, stats.n_replaced
-        else:
-            prob = Problem(profile, np.where(alive, mem_cap, 0.0),
-                           np.where(alive, comp_cap, 0.0), snap, sources,
-                           speed)
-            sol = solve_heuristic(prob, policy)  # type: ignore[arg-type]
-            n_kept, n_rep = 0, len(act)
+            rates = np.stack(rates_t[tick:end])
+        else:                 # the fresh snapshot
+            rates = rates_t[tick]
+        view = make_view(rates, alive.copy())
+        plan = ctrl.admit(Problem(profile, mem_cap, comp_cap, rates, sources,
+                                  speed), view, request_ids=ids)
+        stats = plan.solve_stats
+        n_kept = stats.n_kept if stats is not None else 0
+        n_rep = stats.n_replaced if stats is not None else len(act)
         for row, s in enumerate(act):
-            if sol.admitted[row]:
-                placed[s.id] = sol.assign[row]
+            if plan.admitted[row]:
+                placed[s.id] = plan.assign[row]
                 ever_admitted.add(s.id)
         # capacity invariant under the *snapshot* problem (Eq. 4/5)
-        feas_prob = Problem(profile, np.where(alive, mem_cap, 0.0),
-                            np.where(alive, comp_cap, 0.0), snap, sources,
-                            speed)
-        ev = evaluate(feas_prob, sol)
-        epochs.append(EpochLog(tick, len(act), int(sol.admitted.sum()),
-                               n_kept, n_rep, sol.solve_time_s,
-                               sol.objective, ev.feasible))
+        feas_prob = SnapshotView(rates_t[tick], alive.copy()).bind(
+            Problem(profile, mem_cap, comp_cap, rates_t[tick], sources,
+                    speed))
+        ev = evaluate(feas_prob, plan.solution)
+        epochs.append(EpochLog(tick, len(act), plan.n_admitted,
+                               n_kept, n_rep, plan.solve_time_s,
+                               plan.objective, ev.feasible))
 
     while q:
         ev = q.pop()
@@ -331,8 +341,10 @@ def warm_vs_cold(scn: SwarmScenario, seed: int = 0,
     *decisions* may only differ where the warm path keeps a placement the
     cold solve would recompute identically — the objective ratio reports any
     drift."""
-    warm = simulate(scn, "ould", seed, profile=profile, cold_resolves=False)
-    cold = simulate(scn, "ould", seed, profile=profile, cold_resolves=True)
+    warm = simulate(scn, "incremental", seed, profile=profile,
+                    cold_resolves=False)
+    cold = simulate(scn, "incremental", seed, profile=profile,
+                    cold_resolves=True)
     ratios = [w.objective / c.objective
               for w, c in zip(warm.epochs, cold.epochs)
               if c.objective > 0 and np.isfinite(c.objective)]

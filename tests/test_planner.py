@@ -1,0 +1,305 @@
+"""Planner protocol / TopologyView / registry: every registered strategy
+honors the Solution contract through Plan, and the new API is bit-identical
+to the legacy entry points on fixed-seed instances."""
+
+import dataclasses
+
+import numpy as np
+import pytest
+
+from repro.core import (HorizonView, IncrementalSolver, Plan, Problem,
+                        RPGMobility, RPGParams, SnapshotView, available_planners,
+                        evaluate, get_planner, lenet_profile, make_view,
+                        rate_matrix, register_planner, solve_heuristic,
+                        solve_ould, to_stages)
+from repro.core.profiles import LayerProfile, ModelProfile
+
+MB = 1e6
+
+REGISTERED = ("ould-ilp", "ould-dp", "ould-mp", "nearest", "hrm",
+              "nearest-hrm", "incremental")
+
+
+def _swarm(seed=0, n=8, requests=4, steps=4):
+    mob = RPGMobility(RPGParams(n_uavs=n, area_m=150.0, homogeneous=False),
+                      seed=seed)
+    rates = rate_matrix(mob.positions(1, seed=seed)[0])
+    horizon = mob.predicted_rates(steps, seed=seed + 1)
+    rng = np.random.default_rng(seed)
+    src = rng.integers(0, 3, requests).astype(np.int64)
+    prob = Problem(lenet_profile(), np.full(n, 192 * MB), np.full(n, 95e9),
+                   rates, src, np.full(n, 9.5e9))
+    return prob, rates, horizon
+
+
+def _toy_problem(n=3, r=2, mem_cap=30.0, seed=0):
+    prof = ModelProfile("toy", tuple(
+        LayerProfile(f"l{j}", 10.0, 1.0, [8.0, 4.0, 2.0, 1.0][j])
+        for j in range(4)), input_bytes=16.0)
+    rng = np.random.default_rng(seed)
+    pos = rng.uniform(0, 80, (n, 3))
+    pos[:, 2] = 50.0
+    return Problem(prof, np.full(n, mem_cap), np.full(n, 1e9),
+                   rate_matrix(pos), np.arange(r) % n)
+
+
+# ---------------------------------------------------------------------------
+# registry
+# ---------------------------------------------------------------------------
+
+def test_registry_resolves_all_seven_strategies():
+    for name in REGISTERED:
+        planner = get_planner(name)
+        assert planner.name == name
+        assert planner.view_kinds
+    assert set(REGISTERED) <= set(available_planners())
+
+
+def test_unknown_planner_raises_with_catalog():
+    with pytest.raises(KeyError, match="available"):
+        get_planner("llhr")
+
+
+def test_get_planner_returns_fresh_instances():
+    assert get_planner("incremental") is not get_planner("incremental")
+
+
+def test_register_planner_plugin_roundtrip():
+    @register_planner("test-constant")
+    class _Const:
+        name = "test-constant"
+        view_kinds = ("snapshot",)
+
+        def plan(self, problem, view, *, request_ids=None):
+            sol = solve_ould(view.bind(problem), solver="dp")
+            return Plan(sol, self.name, view.kind, view.bind(problem))
+
+    try:
+        prob, rates, _ = _swarm()
+        plan = get_planner("test-constant").plan(prob, SnapshotView(rates))
+        assert plan.planner_name == "test-constant"
+    finally:
+        from repro.core.planner import _REGISTRY
+        _REGISTRY.pop("test-constant")
+
+
+# ---------------------------------------------------------------------------
+# TopologyView
+# ---------------------------------------------------------------------------
+
+def test_view_rank_validation_and_inference():
+    prob, rates, horizon = _swarm()
+    with pytest.raises(ValueError):
+        SnapshotView(horizon)
+    with pytest.raises(ValueError):
+        HorizonView(rates)
+    assert make_view(rates).kind == "snapshot"
+    assert make_view(horizon).kind == "horizon"
+    assert make_view(horizon).snapshot().kind == "snapshot"
+
+
+def test_snapshot_planners_reject_horizon_views():
+    prob, rates, horizon = _swarm()
+    for name in ("nearest", "hrm", "nearest-hrm", "ould-ilp", "ould-dp"):
+        with pytest.raises(ValueError, match="views"):
+            get_planner(name).plan(prob, HorizonView(horizon))
+    with pytest.raises(ValueError, match="views"):
+        get_planner("ould-mp").plan(prob, SnapshotView(rates))
+
+
+def test_view_bind_masks_dead_nodes_everywhere():
+    prob, rates, _ = _swarm()
+    alive = np.ones(prob.n_nodes, bool)
+    alive[5] = False
+    bound = SnapshotView(rates, alive).bind(prob)
+    assert bound.mem_cap[5] == 0.0 and bound.comp_cap[5] == 0.0
+    assert (bound.rates[5, :] == 0).all() and (bound.rates[:, 5] == 0).all()
+    # all-alive: no copy, caps untouched
+    bound2 = SnapshotView(rates).bind(prob)
+    assert bound2.rates is rates
+    np.testing.assert_array_equal(bound2.mem_cap, prob.mem_cap)
+
+
+# ---------------------------------------------------------------------------
+# equivalence with legacy entry points (fixed seeds)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("name,legacy", [
+    ("ould-ilp", lambda p: solve_ould(p)),
+    ("ould-dp", lambda p: solve_ould(p, solver="dp")),
+    ("nearest", lambda p: solve_heuristic(p, "nearest")),
+    ("hrm", lambda p: solve_heuristic(p, "hrm")),
+    ("nearest-hrm", lambda p: solve_heuristic(p, "nearest_hrm")),
+])
+def test_snapshot_planners_bit_identical_to_legacy(name, legacy):
+    for seed in (0, 1):
+        prob, rates, _ = _swarm(seed=seed)
+        plan = get_planner(name).plan(prob, SnapshotView(rates))
+        sol = legacy(prob)
+        np.testing.assert_array_equal(plan.assign, sol.assign)
+        np.testing.assert_array_equal(plan.admitted, sol.admitted)
+        assert plan.objective == sol.objective
+        assert plan.status == sol.status
+
+
+def test_ould_mp_planner_bit_identical_to_legacy():
+    prob, _, horizon = _swarm()
+    hp = dataclasses.replace(prob, rates=horizon)
+    for solver in ("ilp", "dp"):
+        plan = get_planner("ould-mp", solver=solver).plan(
+            hp, HorizonView(horizon))
+        sol = solve_ould(hp, solver=solver)
+        np.testing.assert_array_equal(plan.assign, sol.assign)
+        assert plan.objective == sol.objective
+
+
+def test_incremental_planner_bit_identical_to_incremental_solver():
+    prob, rates, _ = _swarm()
+    mob = RPGMobility(RPGParams(n_uavs=8, area_m=150.0, homogeneous=False),
+                      seed=0)
+    drifted = rate_matrix(mob.positions(30, seed=3)[29])
+    planner = get_planner("incremental")
+    inc = IncrementalSolver(prob.profile, prob.mem_cap, prob.comp_cap,
+                            prob.compute_speed, solver="dp")
+    p1 = planner.plan(prob, SnapshotView(rates))          # cold prime
+    s1, _ = inc.resolve(rates, prob.sources)
+    p2 = planner.plan(prob, SnapshotView(drifted))        # warm re-solve
+    s2, st2 = inc.resolve(drifted, prob.sources)
+    for plan, sol in ((p1, s1), (p2, s2)):
+        np.testing.assert_array_equal(plan.assign, sol.assign)
+        assert plan.objective == sol.objective
+    assert p2.warm and not p1.warm
+    assert p2.solve_stats.n_kept == st2.n_kept
+    assert p2.solve_stats.n_repriced == st2.n_repriced
+
+
+def test_incremental_planner_cold_mode_matches_solve():
+    prob, rates, _ = _swarm()
+    cold_planner = get_planner("incremental", warm=False)
+    p1 = cold_planner.plan(prob, SnapshotView(rates))
+    p2 = cold_planner.plan(prob, SnapshotView(rates))
+    assert not p1.warm and not p2.warm
+    assert p2.solve_stats.cold
+
+
+# ---------------------------------------------------------------------------
+# Plan honors the Solution contract
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("name", ["ould-ilp", "ould-dp", "nearest", "hrm",
+                                  "nearest-hrm", "incremental"])
+def test_plan_contract_shape_sentinel_and_evaluate(name):
+    # 2 requests × 40B > 3 nodes × 20B ⇒ rejection guaranteed
+    prob = _toy_problem(mem_cap=20.0)
+    plan = get_planner(name).plan(prob, SnapshotView(prob.rates))
+    assert plan.assign.shape == (prob.n_requests, prob.n_layers)
+    assert not plan.admitted.all()
+    for r in np.flatnonzero(~plan.admitted):
+        assert (plan.assign[r] == -1).all()      # rejection sentinel
+        with pytest.raises(ValueError, match="rejected"):
+            plan.stages(r)
+    ev = plan.evaluate()
+    assert ev.feasible
+    assert ev.n_admitted == plan.n_admitted
+
+
+def test_plan_stages_bridge_matches_to_stages():
+    prob, rates, _ = _swarm()
+    plan = get_planner("ould-dp").plan(prob, SnapshotView(rates))
+    for r in np.flatnonzero(plan.admitted):
+        assert plan.stages(r) == to_stages(plan.assign[r])
+
+
+def test_evaluate_guard_still_rejects_sentinel_marked_admitted():
+    from repro.core.ould import Solution
+    prob = _toy_problem(mem_cap=20.0)
+    bad = Solution(np.full((2, 4), -1, np.int64), 0.0, "feasible", 0.0,
+                   np.ones(2, bool))
+    with pytest.raises(AssertionError, match="sentinel"):
+        evaluate(prob, bad)
+
+
+# ---------------------------------------------------------------------------
+# incremental transfer-cost pricing
+# ---------------------------------------------------------------------------
+
+def test_incremental_transfer_cost_bit_identical():
+    from repro.core import incremental_transfer_cost, transfer_cost
+    rng = np.random.default_rng(0)
+    for shape in ((6, 6), (4, 6, 6)):
+        ref = rng.uniform(1e6, 1e8, shape)
+        new = ref.copy()
+        new[..., 2, :] *= 1.5        # node 2's outbound links drift
+        ref_spb = transfer_cost(ref)
+        spb, repriced = incremental_transfer_cost(new, ref, ref_spb)
+        np.testing.assert_array_equal(spb, transfer_cost(new))
+        assert repriced[2].sum() == 5 and repriced.sum() == 5  # row 2 \ diag
+        # no drift ⇒ nothing re-priced
+        spb2, repriced2 = incremental_transfer_cost(ref, ref, ref_spb)
+        assert not repriced2.any()
+        np.testing.assert_array_equal(spb2, ref_spb)
+
+
+def test_incremental_transfer_cost_shape_change_full_reprice():
+    from repro.core import incremental_transfer_cost, transfer_cost
+    rng = np.random.default_rng(1)
+    ref = rng.uniform(1e6, 1e8, (5, 5))
+    new = rng.uniform(1e6, 1e8, (2, 5, 5))
+    spb, repriced = incremental_transfer_cost(new, ref, transfer_cost(ref))
+    assert repriced.all()
+    np.testing.assert_array_equal(spb, transfer_cost(new))
+
+
+def test_price_band_coarser_than_placement_band_rejected():
+    """Pricing staleness above rel_change would hide drift from the
+    re-place trigger — the constructor must refuse it."""
+    with pytest.raises(ValueError, match="price_rel_change"):
+        IncrementalSolver(lenet_profile(), np.full(3, 1e9), np.full(3, 1e9),
+                          rel_change=0.05, price_rel_change=0.2)
+
+
+def test_plan_evaluate_per_step_matches_manual_loop():
+    prob, _, horizon = _swarm()
+    hp = dataclasses.replace(prob, rates=horizon)
+    plan = get_planner("ould-mp", solver="dp").plan(hp, HorizonView(horizon))
+    steps = plan.evaluate_per_step()
+    assert len(steps) == horizon.shape[0]
+    for t, ev in enumerate(steps):
+        manual = evaluate(dataclasses.replace(plan.problem,
+                                              rates=horizon[t]),
+                          plan.solution)
+        assert ev.comm_latency_s == manual.comm_latency_s
+    # explicit rates: play a snapshot plan forward over the horizon
+    prob0 = dataclasses.replace(prob, rates=horizon[0])
+    snap = get_planner("ould-dp").plan(prob0, SnapshotView(horizon[0]))
+    assert len(snap.evaluate_per_step(horizon)) == horizon.shape[0]
+
+
+def test_admission_controller_history_is_lightweight():
+    from repro.core import ResolveStats
+    from repro.runtime.serve import AdmissionController
+    prob, rates, _ = _swarm()
+    ctrl = AdmissionController("nearest")
+    ctrl.admit(prob, rates)
+    ctrl.admit(prob, SnapshotView(rates))
+    assert len(ctrl.history) == 2
+    assert all(isinstance(s, ResolveStats) for s in ctrl.history)
+    assert ctrl.total_solve_time_s >= 0.0
+
+
+def test_solver_repricing_matches_full_pricing_end_to_end():
+    """Warm resolves with row re-pricing must equal a fresh solver that
+    prices every epoch from scratch."""
+    prob, rates, _ = _swarm(seed=2)
+    mob = RPGMobility(RPGParams(n_uavs=8, area_m=150.0, homogeneous=False),
+                      seed=2)
+    pos = mob.positions(40, seed=5)
+    inc = IncrementalSolver(prob.profile, prob.mem_cap, prob.comp_cap,
+                            prob.compute_speed, solver="dp")
+    inc.solve(rates, prob.sources)
+    for t in (10, 20, 39):
+        drift = rate_matrix(pos[t])
+        warm, stats = inc.resolve(drift, prob.sources)
+        cold = solve_ould(dataclasses.replace(prob, rates=drift), solver="dp")
+        assert warm.objective == pytest.approx(cold.objective, rel=1e-12)
+        assert stats.n_repriced >= 0
