@@ -8,13 +8,13 @@ from __future__ import annotations
 
 from repro.core import lenet_profile, vgg16_profile
 
-from .common import HIGH_MEM, LOW_MEM, Csv
+from .common import HIGH_MEM, Csv
 
 
 def run(csv: Csv) -> dict:
     res = {}
     for name, prof in (("lenet", lenet_profile()), ("vgg16", vgg16_profile())):
-        per_layer = [l.memory_bytes / 1e6 for l in prof.layers]
+        per_layer = [ly.memory_bytes / 1e6 for ly in prof.layers]
         res[name] = per_layer
         csv.add(f"profiles/{name}", 0.0,
                 f"M={prof.num_layers} total={prof.total_memory / 1e6:.0f}MB "

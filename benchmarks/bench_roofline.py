@@ -61,7 +61,6 @@ def active_params(arch: str) -> float:
 
 
 def model_flops(arch: str, shape_name: str) -> float:
-    cfg = C.get_config(arch)
     sh = SHAPES[shape_name]
     n = active_params(arch)
     if sh.kind == "train":

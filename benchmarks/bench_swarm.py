@@ -18,7 +18,13 @@ Claims:
       for every policy — churn and mobility never break feasibility;
   S4  changed-row re-pricing of the transfer-cost matrix
       (``incremental_transfer_cost``) is bit-identical to full pricing and
-      ≥ 2× faster when drift is localized (ROADMAP: N ≥ 50 swarms).
+      ≥ 2× faster when drift is localized (ROADMAP: N ≥ 50 swarms);
+  S5  the sparse k-candidate DP (``ould-dp-sparse``) cold-solves N ≥ 50
+      instances ≥ 3× faster than the dense DP at N = 128 — sub-quadratic
+      transition scans + per-source stage memoization — while admitting
+      exactly the same request set on these pinned seeds (the ladder
+      guarantees per-request parity under equal residuals; whole-solve
+      equality is the empirical acceptance bar this claim pins).
 """
 
 from __future__ import annotations
@@ -27,11 +33,12 @@ import time
 
 import numpy as np
 
-from repro.core import incremental_transfer_cost, transfer_cost
+from repro.core import (SnapshotView, get_planner, incremental_transfer_cost,
+                        transfer_cost)
 from repro.runtime.swarm import (PLANNER_POLICIES, SwarmScenario,
                                  compare_policies, warm_vs_cold)
 
-from .common import Csv
+from .common import HIGH_MEM, Csv, snapshot_problem
 
 # Non-homogeneous two-group sweep + node churn: inter-group links fade
 # predictably (mobility), nodes drop unpredictably (failures).
@@ -43,7 +50,7 @@ DRIFT = SwarmScenario(arrival_rate_hz=0.4, hold_ticks_mean=45.0,
                       mem_mb_hotspot_group=512.0, homogeneous=True,
                       epoch_ticks=2, rel_change=0.25, leader_speed_mps=1.0)
 
-QUICK_PLANNERS = ("incremental", "ould-mp", "nearest")
+QUICK_PLANNERS = ("incremental", "incremental-sparse", "ould-mp", "nearest")
 
 
 def _microbench_pricing(csv: Csv, quick: bool) -> dict:
@@ -95,6 +102,67 @@ def _microbench_pricing(csv: Csv, quick: bool) -> dict:
             "bit_identical": exact, "entries_repriced": int(repriced.sum())}
 
 
+def _bench_sparse_dp(csv: Csv, quick: bool) -> dict:
+    """S5: sparse k-candidate DP vs dense DP, cold solves at N ≥ 50.
+
+    Same instance generator at every size (hotspot sources, paper-calibrated
+    caps, 300 m area so the swarm is spread but connected); quick mode trims
+    the largest size and the repetitions, not the N = 128 claim instance.
+    """
+    sizes = (50, 128) if quick else (50, 128, 256)
+    reps = 3 if quick else 5
+    out: dict = {}
+    for n in sizes:
+        requests = max(16, n // 4)
+        prob = snapshot_problem("lenet", n, requests, mem=HIGH_MEM,
+                                area=300.0, seed=0, hotspots=5)
+        view = SnapshotView(prob.rates)
+        dense = get_planner("ould-dp")
+        sparse = get_planner("ould-dp-sparse")
+        dense_s, sparse_s = [], []
+        pd = ps = None
+        for _ in range(reps):                     # min-of-N: noise robust
+            t0 = time.perf_counter()
+            pd = dense.plan(prob, view)
+            dense_s.append(time.perf_counter() - t0)
+            t0 = time.perf_counter()
+            ps = sparse.plan(prob, view)
+            sparse_s.append(time.perf_counter() - t0)
+        speedup = min(dense_s) / max(min(sparse_s), 1e-12)
+        adm_equal = bool(np.array_equal(pd.admitted, ps.admitted))
+        gap = ((ps.objective - pd.objective) / pd.objective
+               if pd.objective > 0 else 0.0)
+        st = ps.solve_stats
+        csv.add(f"swarm/sparse_dp/N{n}", min(sparse_s) * 1e6,
+                f"dense={min(dense_s) * 1e6:.0f}us speedup={speedup:.2f}x "
+                f"k={st.k} pruned={st.pruned_fraction:.3f} "
+                f"esc={st.n_escalations} dense_fb={st.n_dense_fallback} "
+                f"adm={ps.n_admitted}/{requests} adm_equal={adm_equal} "
+                f"obj_gap={gap:+.4f}")
+        # Acceptance bar on THIS pinned instance, not a structural invariant:
+        # at k < N admitted paths may differ, residuals diverge, and a later
+        # admission can legitimately flip on other instances.
+        assert adm_equal, (
+            f"S5: sparse DP admission diverged from dense at N={n}")
+        out[f"N{n}"] = {"requests": requests,
+                        "dense_solve_s": min(dense_s),
+                        "sparse_solve_s": min(sparse_s),
+                        "speedup": speedup, "k": st.k,
+                        "pruned_fraction": st.pruned_fraction,
+                        "admitted": ps.n_admitted,
+                        "admission_equal": adm_equal,
+                        "objective_gap": gap}
+    s5 = out["N128"]["speedup"] >= (2.0 if quick else 3.0)
+    csv.add("swarm/claims/S5_sparse_dp", out["N128"]["sparse_solve_s"] * 1e6,
+            f"speedup_N128={out['N128']['speedup']:.2f}x "
+            f"adm_equal={out['N128']['admission_equal']} holds={s5}")
+    # quick mode keeps a noise-tolerant floor (shared CI runners); the full
+    # run pins the ≥ 3× claim the ROADMAP records.
+    assert s5, (f"S5: sparse DP speedup {out['N128']['speedup']:.2f}x "
+                f"at N=128 below the bar")
+    return out
+
+
 def run(csv: Csv, quick: bool = False, planners=None) -> dict:
     res: dict = {}
     # --- S1/S3: policy comparison on the churn scenario --------------------
@@ -142,6 +210,9 @@ def run(csv: Csv, quick: bool = False, planners=None) -> dict:
 
     # --- S4: incremental transfer-cost pricing -----------------------------
     res["incremental_pricing"] = _microbench_pricing(csv, quick)
+
+    # --- S5: sparse k-candidate DP at N ≥ 50 -------------------------------
+    res["sparse_dp"] = _bench_sparse_dp(csv, quick)
     return res
 
 

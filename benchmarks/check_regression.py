@@ -1,0 +1,153 @@
+"""Benchmark-regression gate: compare a fresh ``--quick`` run against the
+committed baseline.
+
+    PYTHONPATH=src python -m benchmarks.run --quick          # writes results.json
+    python -m benchmarks.check_regression                    # gate
+    python -m benchmarks.check_regression --update-baseline  # bless results
+
+The baseline (``benchmarks/artifacts/baseline_quick.json``) is committed so
+a later PR cannot silently give back a perf win (ROADMAP: the sparse-DP
+speedup at N ≥ 50).  Metrics are compared per kind:
+
+* **exact** (default) — booleans, counts, and deterministic floats (miss /
+  rejection rates, objectives, objective gaps, pruned fractions): equal to
+  relative 1e-6.  Quick scenarios are fixed-seed and solver-deterministic,
+  so these must not move at all; a drift is a behaviour change, not noise.
+* **time** (leaf key ending ``_s`` / ``_us``) — wall-clock: fresh must be
+  ≤ ``--time-tolerance`` × baseline.  Even min-of-N millisecond timings
+  jitter ±40 % on one machine, so the default is 1.75 (pass ``1.25`` for a
+  strict same-machine gate); CI passes a wider factor because shared
+  runners are not the machine the baseline was recorded on.  Getting
+  faster never fails the gate.
+* **speedup** (leaf key containing ``speedup``) — machine-relative ratios,
+  the real lock on the sparse-DP win: fresh must be ≥ 0.6 × baseline.
+  These are ratios of timings taken in the same process, so they hold
+  across machines and are the strict regression signal.
+
+Schema drift (a metric added or removed) fails the gate: update the
+baseline deliberately with ``--update-baseline`` and commit the diff.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import pathlib
+import shutil
+import sys
+
+ARTIFACTS = pathlib.Path(__file__).resolve().parent / "artifacts"
+RESULTS = ARTIFACTS / "results.json"
+BASELINE = ARTIFACTS / "baseline_quick.json"
+
+TIME_TOLERANCE = 1.75     # fresh_time ≤ tol × baseline_time
+SPEEDUP_FLOOR = 0.6       # fresh_speedup ≥ floor × baseline_speedup
+EXACT_REL_TOL = 1e-6      # deterministic metrics: allow float-build jitter
+
+
+def flatten(node, prefix: str = "") -> dict[str, object]:
+    """Nested dicts/lists → {dotted.path: leaf} (lists indexed by position)."""
+    out: dict[str, object] = {}
+    if isinstance(node, dict):
+        for key, val in node.items():
+            out.update(flatten(val, f"{prefix}.{key}" if prefix else str(key)))
+    elif isinstance(node, list):
+        for i, val in enumerate(node):
+            out.update(flatten(val, f"{prefix}[{i}]"))
+    else:
+        out[prefix] = node
+    return out
+
+
+def metric_kind(path: str) -> str:
+    leaf = path.rsplit(".", 1)[-1]
+    if "speedup" in leaf:
+        return "speedup"
+    if leaf.endswith("_s") or leaf.endswith("_us") or leaf.endswith("_time"):
+        return "time"
+    return "exact"
+
+
+def compare(baseline: dict, fresh: dict,
+            time_tolerance: float = TIME_TOLERANCE) -> list[str]:
+    """All regressions between two flattened metric maps (empty = gate ok)."""
+    problems: list[str] = []
+    for path in sorted(set(baseline) | set(fresh)):
+        if path not in fresh:
+            problems.append(f"missing metric {path} (baseline has it)")
+            continue
+        if path not in baseline:
+            problems.append(f"new metric {path} not in baseline "
+                            f"(run --update-baseline)")
+            continue
+        base, new = baseline[path], fresh[path]
+        kind = metric_kind(path)
+        if isinstance(base, bool) or isinstance(new, bool) or \
+                isinstance(base, str) or isinstance(new, str):
+            if base != new:
+                problems.append(f"{path}: {base!r} -> {new!r}")
+            continue
+        if not isinstance(base, (int, float)) or \
+                not isinstance(new, (int, float)):
+            if base != new:
+                problems.append(f"{path}: {base!r} -> {new!r}")
+            continue
+        if kind == "time":
+            if new > base * time_tolerance:
+                problems.append(
+                    f"{path}: {new:.6g}s > {time_tolerance:.2f}x baseline "
+                    f"{base:.6g}s")
+        elif kind == "speedup":
+            if new < base * SPEEDUP_FLOOR:
+                problems.append(
+                    f"{path}: speedup {new:.3g}x < {SPEEDUP_FLOOR:.2f}x "
+                    f"baseline {base:.3g}x")
+        else:
+            if abs(new - base) > EXACT_REL_TOL * max(1.0, abs(base)):
+                problems.append(f"{path}: {base!r} -> {new!r} "
+                                f"(deterministic metric moved)")
+    return problems
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--results", type=pathlib.Path, default=RESULTS,
+                    help="fresh --quick results.json")
+    ap.add_argument("--baseline", type=pathlib.Path, default=BASELINE,
+                    help="committed baseline to gate against")
+    ap.add_argument("--time-tolerance", type=float, default=TIME_TOLERANCE,
+                    help="max allowed fresh/baseline wall-clock ratio "
+                         "(use a wider factor on shared CI runners)")
+    ap.add_argument("--update-baseline", action="store_true",
+                    help="bless the fresh results as the new baseline")
+    args = ap.parse_args()
+
+    results = json.loads(args.results.read_text())
+    errors = {k: v["error"] for k, v in results.items()
+              if isinstance(v, dict) and "error" in v}
+    if errors:
+        print("benchmark modules errored:", errors)
+        sys.exit(1)
+
+    if args.update_baseline:
+        shutil.copyfile(args.results, args.baseline)
+        print(f"baseline updated: {args.baseline} "
+              f"({len(flatten(results))} metrics) — commit the diff")
+        return
+
+    baseline = json.loads(args.baseline.read_text())
+    problems = compare(flatten(baseline), flatten(results),
+                       time_tolerance=args.time_tolerance)
+    if problems:
+        print(f"benchmark regression gate FAILED ({len(problems)}):")
+        for p in problems:
+            print(f"  - {p}")
+        print("if intentional: python -m benchmarks.check_regression "
+              "--update-baseline && commit the baseline diff")
+        sys.exit(1)
+    print(f"benchmark regression gate ok "
+          f"({len(flatten(results))} metrics vs {args.baseline.name})")
+
+
+if __name__ == "__main__":
+    main()

@@ -13,7 +13,7 @@ import time
 
 import numpy as np
 
-from repro.core import (Problem, RPGMobility, RPGParams, RadioParams,
+from repro.core import (Problem, RadioParams, RPGMobility, RPGParams,
                         lenet_profile, rate_matrix, vgg16_profile)
 
 MB = 1e6

@@ -16,11 +16,11 @@ import numpy as np
 
 import repro.configs as C
 from repro.core.placement import to_stages
+from repro.core.profiles import lm_profile
 from repro.core.radio import TpuLinkModel
 from repro.models import init_params
 from repro.runtime import elastic
-from repro.runtime.serve import Server, ServeConfig, schedule_requests
-from repro.core.profiles import lm_profile
+from repro.runtime.serve import ServeConfig, Server, schedule_requests
 
 
 def main() -> None:

@@ -9,7 +9,8 @@ from .heuristics import solve_heuristic
 from .latency import Evaluation, evaluate
 from .mobility import MultiGroupMobility, RPGMobility, RPGParams
 from .ould import (IncrementalSolver, Problem, ResolveStats, Solution,
-                   incremental_transfer_cost, solve_ould, transfer_cost)
+                   default_sparse_k, incremental_transfer_cost, solve_ould,
+                   transfer_cost)
 from .ould_mp import (MPResult, solve_offline_fixed, solve_ould_mp,
                       solve_static_resolve)
 from .placement import (Stage, balanced_stages, ould_pipeline_stages,
@@ -27,7 +28,8 @@ __all__ = [
     "MPResult", "ModelProfile", "MultiGroupMobility", "Plan", "Planner",
     "Problem", "RPGMobility", "RPGParams", "RadioParams", "ResolveStats",
     "SnapshotView", "Solution", "Stage", "TopologyView", "TpuLinkModel",
-    "available_planners", "balanced_stages", "churn_events", "evaluate",
+    "available_planners", "balanced_stages", "churn_events",
+    "default_sparse_k", "evaluate",
     "get_planner", "incremental_transfer_cost", "lenet_profile",
     "lm_profile", "make_view", "ould_pipeline_stages", "poisson_process",
     "rate_matrix", "register_planner", "sinr_matrix", "solve_heuristic",

@@ -31,6 +31,20 @@ Solvers
   lattice when capacity constraints are slack; with contention it becomes a
   sequential greedy-DP (requests placed one at a time, capacities decremented)
   — our large-instance fallback, also the warm-start generator.
+* ``solver="dp-sparse"`` — the same sequential greedy-DP with each layer's
+  transition pruned to the ``k`` best candidate nodes (ranked by residual
+  seconds/byte from the request's source plus a capacity-headroom tiebreak)
+  instead of scanning all N×N transitions: O(M·(N + k²)) per request instead
+  of O(M·N²).  A fallback ladder keeps each request's admission decision
+  identical to ``"dp"``'s *under the same residual capacities*: whenever the
+  pruned DP rejects (or only finds a path over a ``_BIG``-priced link), the
+  request retries with k doubled and, as a last resort, the dense kernel —
+  and at k ≥ N the two solvers are bit-identical by construction.  At k < N
+  an admitted request's *path* may differ, so residuals can diverge across
+  the greedy sequence and whole-solve admission equality is an empirical,
+  seed-pinned property (checked by bench_swarm S5 and the equivalence
+  tests), not a structural guarantee.
+  This is the ROADMAP's N ≥ 50 swarm regime (bench_swarm S5).
 
 OULD-MP is the same formulation with rate coefficients summed over the
 predicted horizon: cost(i,k) uses Σ_t 1/ρ_{i,k}(t) (Eq. 14).  A pair that is
@@ -41,8 +55,9 @@ is exactly the paper's argument for why MP avoids mid-mission outages.
 from __future__ import annotations
 
 import dataclasses
+import functools
 import time
-from typing import Literal
+from typing import Callable, Literal
 
 import numpy as np
 import scipy.sparse as sp
@@ -50,7 +65,7 @@ from scipy.optimize import Bounds, LinearConstraint, milp
 
 from .profiles import ModelProfile
 
-Solver = Literal["ilp", "dp"]
+Solver = Literal["ilp", "dp", "dp-sparse"]
 
 _BIG = 1e12  # stand-in for an unreachable (disconnected) pair
 
@@ -164,6 +179,7 @@ class Solution:
     solve_time_s: float
     admitted: np.ndarray         # (R,) bool — False = request rejected
     solver: str = "ilp"
+    dp_stats: "ResolveStats | None" = None  # sparse-DP provenance (k, ladder)
 
     @property
     def n_admitted(self) -> int:
@@ -376,6 +392,148 @@ def _dp_single_request(spb: np.ndarray, K: list[float], Ks: float, src: int,
     return path, float(cost[-1, end])
 
 
+def default_sparse_k(n_nodes: int) -> int:
+    """Default per-layer candidate budget of the sparse DP: ⌈√N⌉ keeps the
+    pruned transition scan O(M·N) overall (N candidates scored, √N² kept),
+    with a floor so tiny swarms still see a meaningful candidate set."""
+    return max(4, int(np.ceil(np.sqrt(n_nodes))))
+
+
+class _SparseCounters:
+    """Mutable tally of what the sparse ladder actually did (one solve)."""
+
+    __slots__ = ("n_runs", "n_scanned", "n_dense_equiv", "n_escalations",
+                 "n_dense_fallback")
+
+    def __init__(self):
+        self.n_runs = 0             # DP kernel invocations (incl. repairs)
+        self.n_scanned = 0          # lattice transitions actually scanned
+        self.n_dense_equiv = 0      # what the dense kernel would have scanned
+        self.n_escalations = 0      # k-doubling retries
+        self.n_dense_fallback = 0   # requests that hit the dense last resort
+
+    def wrap(self, kernel: Callable, per_run: int, dense_per_run: int):
+        """Instrument ``kernel`` so every invocation (the repair loop re-runs
+        it) is charged ``per_run`` scanned transitions."""
+        def run(*args):
+            self.n_runs += 1
+            self.n_scanned += per_run
+            self.n_dense_equiv += dense_per_run
+            return kernel(*args)
+        return run
+
+    @property
+    def pruned_fraction(self) -> float:
+        if self.n_dense_equiv == 0:
+            return 0.0
+        return 1.0 - self.n_scanned / self.n_dense_equiv
+
+
+def _dp_single_request_sparse(spb: np.ndarray, K: list[float], Ks: float,
+                              src: int, mem: list[float], comp: list[float],
+                              mem_left: np.ndarray, comp_left: np.ndarray,
+                              compute_cost: np.ndarray | None, k: int,
+                              head: np.ndarray | None = None,
+                              consts: tuple | None = None
+                              ) -> tuple[np.ndarray | None, float]:
+    """Pruned lattice DP: per layer, only the ``k`` best candidate nodes.
+
+    Candidates are ranked by seconds/byte from the request's source under the
+    residual topology (cheap proxy for how expensive it is to route
+    activations through the node) with a small capacity-headroom tiebreak
+    (``head``; recomputed from the residual capacities when not supplied),
+    feasibility-masked per layer.  Candidate lists are kept in ascending node
+    order so that at k ≥ N the argmin tie-breaking — and therefore the
+    returned path — is bit-identical to :func:`_dp_single_request`.
+
+    The formulation is one vectorized pass: an (M, N) feasibility mask, one
+    masked argpartition, an (M-1, k, k) gather of the transition
+    sub-matrices with the infeasibility penalty and compute cost pre-added,
+    and a recurrence that touches k² entries per layer instead of N².
+    ``consts`` carries per-solve invariants (K vector, per-layer demands,
+    score scale) so repeated calls skip their recomputation.
+    """
+    if consts is None:
+        consts = _sparse_consts(spb, K, mem, comp)
+    if head is None:
+        head = (mem_left / max(float(mem_left.max()), 1e-30)
+                + comp_left / max(float(comp_left.max()), 1e-30))
+    cand, valid = _sparse_select(spb, src, mem_left, comp_left, head,
+                                 consts, k)
+    return _sparse_run(spb, Ks, src, compute_cost, cand, valid, consts)
+
+
+def _sparse_consts(spb: np.ndarray, K: list[float], mem: list[float],
+                   comp: list[float]) -> tuple:
+    """Per-solve invariants of the sparse kernel: (K, m, c vectors and the
+    candidate-score normalizer 1/max finite spb)."""
+    finite = spb[(spb > 0) & (spb < _BIG)]
+    scale = float(finite.max()) if finite.size else 1.0
+    return (np.asarray(K, float), np.asarray(mem, float),
+            np.asarray(comp, float), 1.0 / scale)
+
+
+def _sparse_select(spb: np.ndarray, src: int, mem_left: np.ndarray,
+                   comp_left: np.ndarray, head: np.ndarray, consts: tuple,
+                   k: int) -> tuple[np.ndarray, np.ndarray]:
+    """Candidate selection of the pruned DP: per layer, the k best feasible
+    nodes by score, in ascending node order.  Returns (cand, valid) — the
+    (M, k) candidate node ids and their per-layer feasibility bits.  The DP
+    output is a pure function of these two arrays (given the fixed spb and
+    compute costs), which is what makes cached stage outputs certifiable by
+    an equality check on them."""
+    _, mem_a, comp_a, inv_scale = consts
+    N, M = spb.shape[0], mem_a.shape[0]
+    kk = int(min(k, N))
+    feas = ((mem_left[None, :] >= mem_a[:, None])
+            & (comp_left[None, :] >= comp_a[:, None]))      # (M, N)
+    score = spb[src] * inv_scale - 1e-3 * head  # cost dominates, headroom ties
+    masked = np.where(feas, score[None, :], np.inf)         # (M, N)
+    if kk < N:
+        cand = np.argpartition(masked, kk - 1, axis=1)[:, :kk]
+        cand.sort(axis=1)                   # ascending node ids (dense tie-break)
+    else:
+        cand = np.broadcast_to(np.arange(N), (M, N))
+    valid = feas[np.arange(M)[:, None], cand]               # (M, kk)
+    return cand, valid
+
+
+def _sparse_run(spb: np.ndarray, Ks: float, src: int,
+                compute_cost: np.ndarray | None, cand: np.ndarray,
+                valid: np.ndarray, consts: tuple
+                ) -> tuple[np.ndarray | None, float]:
+    """The pruned DP recurrence over pre-selected candidates: an (M-1, k, k)
+    transition block with the infeasibility penalty (and target compute cost)
+    folded in once, then a k²-per-layer min-plus sweep."""
+    Kv = consts[0]
+    M, kk = cand.shape
+    pen = np.where(valid, 0.0, np.inf)                      # (M, kk) additive
+    cost = Ks * spb[src, cand[0]] + pen[0]  # spb[src, src] == 0: free at src
+    if compute_cost is not None:
+        cost = cost + compute_cost[0, cand[0]]
+    trans = Kv[:M - 1, None, None] * spb[cand[:-1, :, None], cand[1:, None, :]]
+    trans += pen[1:, None, :]
+    if compute_cost is not None:
+        trans += compute_cost[np.arange(1, M)[:, None], cand[1:]][:, None, :]
+    back = np.empty((M, kk), np.int64)
+    rng_kk = np.arange(kk)
+    for j in range(1, M):
+        step = cost[:, None] + trans[j - 1]                 # (kk prev, kk cur)
+        b = step.argmin(axis=0)
+        back[j] = b
+        cost = step[b, rng_kk]
+    end = int(np.argmin(cost))
+    if not np.isfinite(cost[end]):
+        return None, float("inf")
+    path = np.zeros(M, np.int64)
+    idx = end
+    path[M - 1] = cand[M - 1, idx]
+    for j in range(M - 1, 0, -1):
+        idx = int(back[j, idx])
+        path[j - 1] = cand[j - 1, idx]
+    return path, float(cost[end])
+
+
 def _repair_capacity(path: np.ndarray, mem: list[float], comp: list[float],
                      mem_left: np.ndarray, comp_left: np.ndarray) -> bool:
     """Check a DP path against *joint* per-node load; True if it fits."""
@@ -391,7 +549,8 @@ def _repair_capacity(path: np.ndarray, mem: list[float], comp: list[float],
 def _place_request(spb: np.ndarray, K: list[float], Ks: float, src: int,
                    mem: list[float], comp: list[float],
                    mem_left: np.ndarray, comp_left: np.ndarray,
-                   compute_cost: np.ndarray | None) -> tuple[np.ndarray | None, float]:
+                   compute_cost: np.ndarray | None,
+                   kernel: Callable = _dp_single_request) -> tuple[np.ndarray | None, float]:
     """Place ONE request against residual capacity: lattice DP + repair loop.
 
     The lattice DP checks per-layer feasibility, not the joint within-request
@@ -399,10 +558,14 @@ def _place_request(spb: np.ndarray, K: list[float], Ks: float, src: int,
     compute of the most-overloaded node and re-plans — forcing the DP to
     spread until the joint check passes.  Shared by the cold greedy-DP solve
     and the incremental warm re-solve.  Does NOT mutate mem_left/comp_left.
+
+    ``kernel`` is the single-request DP — the dense N×N scan by default, or a
+    pruned k-candidate kernel (the sparse solver runs the same repair loop,
+    only the inner shortest-path search changes).
     """
     N = spb.shape[0]
-    path, cost = _dp_single_request(spb, K, Ks, src, mem, comp,
-                                    mem_left, comp_left, compute_cost)
+    path, cost = kernel(spb, K, Ks, src, mem, comp,
+                        mem_left, comp_left, compute_cost)
     mem_adv = mem_left.copy()
     comp_adv = comp_left.copy()
     for _ in range(4 * N):
@@ -427,12 +590,208 @@ def _place_request(spb: np.ndarray, K: list[float], Ks: float, src: int,
             comp_adv[busy] = max(comp_adv[busy] / 2.0, 0.0)
             if comp_adv[busy] < min((c for c in comp if c > 0), default=0):
                 comp_adv[busy] = 0.0
-        path, cost = _dp_single_request(spb, K, Ks, src, mem, comp,
-                                        mem_adv, comp_adv, compute_cost)
+        path, cost = kernel(spb, K, Ks, src, mem, comp,
+                            mem_adv, comp_adv, compute_cost)
     if path is None or not _repair_capacity(path, mem, comp, mem_left,
                                             comp_left):
         return None, float("inf")
     return path, cost
+
+
+class _SparsePlacer:
+    """Sequential sparse placement over one priced topology.
+
+    Owns the two levers that make the k-candidate DP fast at N ≥ 50:
+
+    * **The fallback ladder** (admission parity with the dense DP): a request
+      the pruned kernel rejects — no feasible path inside the candidate
+      sets, only one riding a ``_BIG``-priced (disconnected) link, or only
+      one over the ``max_path_cost`` admission bar — retries with k doubled
+      and, once k ≥ N, the dense kernel.  Every request's admission
+      decision is therefore identical to
+      ``solver="dp"``'s under the same residual capacities; only the *path*
+      of an admitted request may differ while k < N.
+    * **Per-source stage memoization**: the pruned DP's output is a pure
+      function of the selected (candidates, feasibility) arrays — so each
+      ladder stage's unrepaired output is cached per source and *certified*
+      on replay by re-running only the cheap candidate selection and
+      comparing: equal arrays ⇒ the DP would reproduce the cached path
+      bit-for-bit, so the k²-transition sweep is skipped.  (The headroom
+      tiebreak entering the selection score is frozen per *feasibility
+      epoch* — bumped whenever a commit flips any per-layer feasibility
+      bit — keeping selection deterministic between flips; dense-kernel
+      stages, which read the full topology, are certified by epoch equality
+      instead.)  A certified path is accepted only when it passes the joint
+      residual check *right now*; anything residual-dependent (a failed
+      fit, a repaired path) falls back to a full ladder re-run.  Because
+      residuals only shrink during a solve, a cached stage that failed its
+      fit check can never start fitting again — replay is exactly what a
+      fresh run would compute, minus the DP sweeps.
+
+    Residual capacity arrays are the caller's; :meth:`commit` mutates them
+    in place so the caller observes every reservation.
+    """
+
+    def __init__(self, spb: np.ndarray, K: list[float], Ks: float,
+                 mem: list[float], comp: list[float],
+                 mem_left: np.ndarray, comp_left: np.ndarray,
+                 compute_cost: np.ndarray | None, *, k: int,
+                 max_path_cost: float | None = None,
+                 counters: _SparseCounters | None = None):
+        self.spb = spb
+        self.K, self.Ks, self.mem, self.comp = K, Ks, mem, comp
+        self.mem_left, self.comp_left = mem_left, comp_left
+        self.compute_cost = compute_cost
+        self.k = max(1, int(k))
+        self.max_path_cost = max_path_cost
+        self.counters = counters
+        self.consts = _sparse_consts(spb, K, mem, comp)
+        _, self._mem_a, self._comp_a, _ = self.consts
+        self._feas = self._feas_of(np.arange(spb.shape[0]))   # (M, N)
+        self._head = self._headroom()
+        self._epoch = 0
+        # src → (epoch, [(lvl, cand, valid, p0, cost0, is_dense), ...])
+        self._cache: dict[int, tuple[int, list]] = {}
+        self.n_cache_hits = 0
+
+    # -- epoch bookkeeping --------------------------------------------------
+
+    def _feas_of(self, cols: np.ndarray) -> np.ndarray:
+        return ((self.mem_left[cols][None, :] >= self._mem_a[:, None])
+                & (self.comp_left[cols][None, :] >= self._comp_a[:, None]))
+
+    def _headroom(self) -> np.ndarray:
+        return (self.mem_left / max(float(self.mem_left.max()), 1e-30)
+                + self.comp_left / max(float(self.comp_left.max()), 1e-30))
+
+    def _fits(self, path: np.ndarray) -> bool:
+        return _repair_capacity(path, self.mem, self.comp,
+                                self.mem_left, self.comp_left)
+
+    def commit(self, path: np.ndarray) -> None:
+        """Reserve a placed path's capacity; advance the feasibility epoch
+        when any (layer, node) feasibility bit flips."""
+        for j, i in enumerate(path):
+            self.mem_left[i] -= self.mem[j]
+            self.comp_left[i] -= self.comp[j]
+        cols = np.unique(path)
+        fresh = self._feas_of(cols)
+        if not np.array_equal(fresh, self._feas[:, cols]):
+            self._feas[:, cols] = fresh
+            self._head = self._headroom()
+            self._epoch += 1
+
+    # -- placement ----------------------------------------------------------
+
+    def place(self, src: int) -> tuple[np.ndarray | None, float]:
+        """Ladder placement for one request (cache replay when certified)."""
+        ent = self._cache.get(src)
+        if ent is None:
+            return self._ladder(src)
+        epoch, stages = ent
+        for lvl, cand, valid, p0, cost0, is_dense in stages:
+            if is_dense:
+                if epoch != self._epoch:    # dense reads the full topology
+                    return self._ladder(src)
+            else:
+                now = _sparse_select(self.spb, src, self.mem_left,
+                                     self.comp_left, self._head, self.consts,
+                                     lvl)
+                if not (np.array_equal(now[0], cand)
+                        and np.array_equal(now[1], valid)):
+                    return self._ladder(src)    # selection moved: re-run
+            # Stage output certified identical to a fresh kernel run.
+            if p0 is None:
+                continue                    # no path through the candidates
+            if not is_dense and (cost0 >= _BIG
+                                 or (self.max_path_cost is not None
+                                     and cost0 > self.max_path_cost)):
+                continue                    # repair only raises cost: the
+                                            # fresh ladder would escalate too
+            if self._fits(p0):
+                self.n_cache_hits += 1
+                return p0, cost0
+            return self._ladder(src)        # residual-dependent: re-run
+        # Every stage certified and skipped ⇒ the fresh ladder would reject.
+        self.n_cache_hits += 1
+        return None, float("inf")
+
+    def _ladder(self, src: int) -> tuple[np.ndarray | None, float]:
+        N, M = self.spb.shape[0], len(self.K)
+        dense_per_run = (M - 1) * N * N
+        counters = self.counters
+        stages: list[tuple] = []
+        result: tuple[np.ndarray | None, float] = (None, float("inf"))
+        kk = self.k
+        levels = []
+        while kk < N:
+            levels.append(kk)
+            kk *= 2
+        levels.append(N)                    # dense last resort
+        for lvl in levels:
+            if lvl >= N:                    # dense last resort
+                base: Callable = _dp_single_request
+                if counters is not None:
+                    counters.n_dense_fallback += 1
+                    base = counters.wrap(base, dense_per_run, dense_per_run)
+                first: list = []
+
+                def kernel(*args, _base=base, _first=first):
+                    out = _base(*args)
+                    if not _first:
+                        _first.append(out)  # the unrepaired stage output p0
+                    return out
+
+                path, cost = _place_request(self.spb, self.K, self.Ks, src,
+                                            self.mem, self.comp,
+                                            self.mem_left, self.comp_left,
+                                            self.compute_cost, kernel=kernel)
+                stages.append((lvl, None, None, *first[0], True))
+                result = (path, cost)
+                break
+            cand, valid = _sparse_select(self.spb, src, self.mem_left,
+                                         self.comp_left, self._head,
+                                         self.consts, lvl)
+            if counters is not None:
+                counters.n_runs += 1
+                counters.n_scanned += (M - 1) * lvl * lvl
+                counters.n_dense_equiv += dense_per_run
+            p0, cost0 = _sparse_run(self.spb, self.Ks, src,
+                                    self.compute_cost, cand, valid,
+                                    self.consts)
+            stages.append((lvl, cand, valid, p0, cost0, False))
+            # Escalate off a ``_BIG``-priced path unconditionally: the pruned
+            # candidate set may have missed a finite relay (e.g. the single
+            # bridge node between two clusters) that a wider set — or the
+            # dense last resort — still finds.  Also escalate when the path
+            # is over the admission bar; repair only raises cost, so neither
+            # skip can hide a path this stage could have admitted.
+            too_dear = (cost0 >= _BIG
+                        or (self.max_path_cost is not None
+                            and cost0 > self.max_path_cost))
+            if p0 is not None and not too_dear:
+                if self._fits(p0):
+                    result = (p0, cost0)
+                    break
+                # Joint within-request overload: run the full repair loop
+                # with the same pruned kernel (recomputes p0, then spreads).
+                base = functools.partial(_dp_single_request_sparse, k=lvl,
+                                         head=self._head, consts=self.consts)
+                if counters is not None:
+                    base = counters.wrap(base, (M - 1) * lvl * lvl,
+                                         dense_per_run)
+                path, cost = _place_request(self.spb, self.K, self.Ks, src,
+                                            self.mem, self.comp,
+                                            self.mem_left, self.comp_left,
+                                            self.compute_cost, kernel=base)
+                if path is not None and (self.max_path_cost is None
+                                         or cost <= self.max_path_cost):
+                    result = (path, cost)
+                    break
+            if counters is not None:
+                counters.n_escalations += 1
+        self._cache[src] = (self._epoch, stages)
+        return result
 
 
 def _path_cost(spb: np.ndarray, K: list[float], Ks: float, src: int,
@@ -451,15 +810,21 @@ def _path_cost(spb: np.ndarray, K: list[float], Ks: float, src: int,
 
 
 def _solve_dp(prob: Problem, *, include_compute: bool,
-              max_path_cost: float | None = None) -> tuple[np.ndarray, float, np.ndarray]:
+              max_path_cost: float | None = None,
+              sparse_k: int | None = None
+              ) -> tuple[np.ndarray, float, np.ndarray, "ResolveStats | None"]:
     """Sequential greedy-DP: requests placed one at a time (exact per request,
-    greedy across requests).  Returns (assign, total_comm_latency, admitted);
-    rejected rows carry the ``-1`` sentinel.
+    greedy across requests).  Returns (assign, total_comm_latency, admitted,
+    stats); rejected rows carry the ``-1`` sentinel.  ``stats`` is None for
+    the dense scan and a :class:`ResolveStats` carrying the pruning telemetry
+    (k, escalations, dense fallbacks, pruned fraction) when ``sparse_k`` is
+    set.
 
     ``max_path_cost`` rejects a request whose cheapest feasible path still
     costs more — i.e. it would ride a disconnected (``_BIG``-priced) link.
     The paper's admission semantics: serve over a dead link is an outage, so
     such requests are rejected rather than placed (§IV-A / Fig. 13)."""
+    t0 = time.perf_counter()
     R, N, M = prob.n_requests, prob.n_nodes, prob.n_layers
     spb = prob.transfer_cost()
     K = prob.profile.output_vector()
@@ -474,20 +839,40 @@ def _solve_dp(prob: Problem, *, include_compute: bool,
     assign = np.full((R, M), -1, np.int64)
     admitted = np.zeros(R, bool)
     total = 0.0
+    counters = _SparseCounters() if sparse_k is not None else None
+    placer = None
+    if sparse_k is not None:
+        placer = _SparsePlacer(spb, K, prob.profile.input_bytes, mem, comp,
+                               mem_left, comp_left, compute_cost,
+                               k=sparse_k, max_path_cost=max_path_cost,
+                               counters=counters)
     for r in range(R):
-        path, cost = _place_request(
-            spb, K, prob.profile.input_bytes, int(prob.sources[r]),
-            mem, comp, mem_left, comp_left, compute_cost)
+        if placer is not None:
+            path, cost = placer.place(int(prob.sources[r]))
+        else:
+            path, cost = _place_request(
+                spb, K, prob.profile.input_bytes, int(prob.sources[r]),
+                mem, comp, mem_left, comp_left, compute_cost)
         if path is None or (max_path_cost is not None and cost > max_path_cost):
             admitted[r] = False
             continue
-        for j, i in enumerate(path):
-            mem_left[i] -= mem[j]
-            comp_left[i] -= comp[j]
+        if placer is not None:
+            placer.commit(path)
+        else:
+            for j, i in enumerate(path):
+                mem_left[i] -= mem[j]
+                comp_left[i] -= comp[j]
         assign[r] = path
         admitted[r] = True
         total += cost
-    return assign, total, admitted
+    stats = None
+    if counters is not None:
+        stats = ResolveStats(0, R, N, True, time.perf_counter() - t0,
+                             k=int(sparse_k),
+                             n_dense_fallback=counters.n_dense_fallback,
+                             n_escalations=counters.n_escalations,
+                             pruned_fraction=counters.pruned_fraction)
+    return assign, total, admitted, stats
 
 
 # ---------------------------------------------------------------------------
@@ -499,7 +884,8 @@ def solve_ould(prob: Problem, *, solver: Solver = "ilp",
                gamma_relaxed: bool = True, time_limit: float | None = None,
                mip_rel_gap: float = 1e-6,
                constraint_cache: dict | None = None,
-               max_path_cost: float | None = None) -> Solution:
+               max_path_cost: float | None = None,
+               sparse_k: int | None = None) -> Solution:
     """Solve an OULD / OULD-MP instance.
 
     Legacy entry point (kept for one release): new code goes through the
@@ -514,16 +900,23 @@ def solve_ould(prob: Problem, *, solver: Solver = "ilp",
     ``constraint_cache`` (a caller-owned dict) memoizes the sparse ILP
     constraint matrix across repeated solves of same-shaped instances —
     topology drift only changes the objective coefficients.
+
+    ``sparse_k`` is the per-layer candidate budget of the ``"dp-sparse"``
+    solver (None ⇒ :func:`default_sparse_k`); ignored by the other solvers.
     """
     t0 = time.perf_counter()
     R = prob.n_requests
-    if solver == "dp":
-        assign, obj, admitted = _solve_dp(prob, include_compute=include_compute,
-                                          max_path_cost=max_path_cost)
+    if solver in ("dp", "dp-sparse"):
+        k = None
+        if solver == "dp-sparse":
+            k = sparse_k if sparse_k is not None else default_sparse_k(prob.n_nodes)
+        assign, obj, admitted, stats = _solve_dp(
+            prob, include_compute=include_compute,
+            max_path_cost=max_path_cost, sparse_k=k)
         n_rej = int(prob.n_requests - admitted.sum())
         status = "feasible" if n_rej == 0 else f"rejected:{n_rej}"
         return Solution(assign, obj, status, time.perf_counter() - t0,
-                        admitted, solver="dp")
+                        admitted, solver=solver, dp_stats=stats)
 
     admitted = np.ones(R, bool)
     n_try = R
@@ -554,7 +947,7 @@ def solve_ould(prob: Problem, *, solver: Solver = "ilp",
 
 @dataclasses.dataclass(frozen=True)
 class ResolveStats:
-    """What one warm re-solve actually did."""
+    """What one solve actually did (warm re-solve and/or sparse DP)."""
 
     n_kept: int            # requests whose placement survived unchanged
     n_replaced: int        # requests re-placed (path touched a changed node)
@@ -562,6 +955,11 @@ class ResolveStats:
     cold: bool             # True when the solve fell back to a full solve
     solve_time_s: float
     n_repriced: int = -1   # transfer-cost entries re-priced (-1: full price)
+    # Sparse k-candidate DP telemetry (k == 0 ⇒ the dense kernel ran).
+    k: int = 0             # per-layer candidate budget of the pruned DP
+    n_dense_fallback: int = 0   # requests that hit the dense last resort
+    n_escalations: int = 0      # k-doubling retries across requests
+    pruned_fraction: float = 0.0  # share of N² transition scans avoided
 
 
 class IncrementalSolver:
@@ -598,7 +996,8 @@ class IncrementalSolver:
                  solver: Solver = "dp", include_compute: bool = False,
                  rel_change: float = 0.05, price_rel_change: float = 0.0,
                  max_path_cost: float | None = None,
-                 rate_unit_bytes: float = 1 / 8.0, **ilp_kw):
+                 rate_unit_bytes: float = 1 / 8.0,
+                 sparse_k: int | None = None, **ilp_kw):
         self.profile = profile
         self.mem_cap = np.asarray(mem_cap, float)
         self.comp_cap = np.asarray(comp_cap, float)
@@ -606,6 +1005,10 @@ class IncrementalSolver:
         self.solver: Solver = solver
         self.include_compute = include_compute
         self.rel_change = rel_change
+        # Candidate budget when solver == "dp-sparse" (None ⇒ default √N
+        # rule); the warm path re-places touched requests with the SAME
+        # pruned kernel + fallback ladder as the cold sparse solve.
+        self.sparse_k = sparse_k
         # Entry re-pricing threshold for incremental_transfer_cost; 0.0 keeps
         # the cost matrix exact (only entries with *any* drift recomputed).
         # Must not exceed rel_change: _changed_nodes reads the incrementally
@@ -727,12 +1130,18 @@ class IncrementalSolver:
                          include_compute=self.include_compute,
                          constraint_cache=self.constraint_cache,
                          max_path_cost=self.max_path_cost,
+                         sparse_k=self.sparse_k,
                          **self.ilp_kw)
         spb, n_repriced = self._priced_spb(prob)
         self._remember(spb, alive, request_ids, sol.assign, sol.admitted)
         dt = time.perf_counter() - t0
-        return sol, ResolveStats(0, prob.n_requests, prob.n_nodes, True, dt,
-                                 n_repriced)
+        ds = sol.dp_stats
+        return sol, ResolveStats(
+            0, prob.n_requests, prob.n_nodes, True, dt, n_repriced,
+            k=ds.k if ds else 0,
+            n_dense_fallback=ds.n_dense_fallback if ds else 0,
+            n_escalations=ds.n_escalations if ds else 0,
+            pruned_fraction=ds.pruned_fraction if ds else 0.0)
 
     def resolve(self, rates: np.ndarray, sources: np.ndarray,
                 request_ids=None,
@@ -747,7 +1156,7 @@ class IncrementalSolver:
         R, M = prob.n_requests, prob.n_layers
         if request_ids is None:
             request_ids = list(range(R))
-        if self.solver != "dp" or self._spb is None:
+        if self.solver not in ("dp", "dp-sparse") or self._spb is None:
             return self.solve(rates, sources, request_ids, alive)
 
         spb, n_repriced = self._priced_spb(prob)
@@ -785,16 +1194,32 @@ class IncrementalSolver:
             else:
                 todo.append(r)
         n_kept = R - len(todo)
+        sparse = self.solver == "dp-sparse"
+        counters = _SparseCounters() if sparse else None
+        k = (self.sparse_k if self.sparse_k is not None
+             else default_sparse_k(prob.n_nodes)) if sparse else 0
+        placer = None
+        if sparse:
+            placer = _SparsePlacer(spb, K, Ks, mem, comp, mem_left,
+                                   comp_left, compute_cost, k=k,
+                                   max_path_cost=self.max_path_cost,
+                                   counters=counters)
         for r in todo:
-            path, cost = _place_request(spb, K, Ks, int(prob.sources[r]),
-                                        mem, comp, mem_left, comp_left,
-                                        compute_cost)
+            if placer is not None:
+                path, cost = placer.place(int(prob.sources[r]))
+            else:
+                path, cost = _place_request(spb, K, Ks, int(prob.sources[r]),
+                                            mem, comp, mem_left, comp_left,
+                                            compute_cost)
             if path is None or (self.max_path_cost is not None
                                 and cost > self.max_path_cost):
                 continue
-            for j, i in enumerate(path):
-                mem_left[i] -= mem[j]
-                comp_left[i] -= comp[j]
+            if placer is not None:
+                placer.commit(path)
+            else:
+                for j, i in enumerate(path):
+                    mem_left[i] -= mem[j]
+                    comp_left[i] -= comp[j]
             assign[r] = path
             admitted[r] = True
         # Objective re-priced for EVERY admitted request — kept paths are not
@@ -809,6 +1234,10 @@ class IncrementalSolver:
         n_rej = int(R - admitted.sum())
         status = "feasible" if n_rej == 0 else f"rejected:{n_rej}"
         sol = Solution(assign, float(total), status, dt, admitted,
-                       solver="dp-warm")
-        return sol, ResolveStats(n_kept, len(todo), int(changed.sum()),
-                                 False, dt, n_repriced)
+                       solver="dp-sparse-warm" if sparse else "dp-warm")
+        return sol, ResolveStats(
+            n_kept, len(todo), int(changed.sum()), False, dt, n_repriced,
+            k=k,
+            n_dense_fallback=counters.n_dense_fallback if counters else 0,
+            n_escalations=counters.n_escalations if counters else 0,
+            pruned_fraction=counters.pruned_fraction if counters else 0.0)

@@ -26,7 +26,7 @@ import time
 import numpy as np
 
 from .latency import Evaluation, evaluate
-from .mobility import RPGMobility, RPGParams
+from .mobility import RPGMobility
 from .ould import Problem, Solution, solve_ould
 from .profiles import ModelProfile
 from .radio import RadioParams

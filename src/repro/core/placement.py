@@ -13,9 +13,9 @@ import dataclasses
 
 import numpy as np
 
-from .ould import Problem, Solution, solve_ould
-from .radio import TpuLinkModel
+from .ould import Problem, solve_ould
 from .profiles import ModelProfile
+from .radio import TpuLinkModel
 
 
 @dataclasses.dataclass(frozen=True)

@@ -22,10 +22,16 @@ consumer goes through instead:
   solved against, bridging directly into :func:`~repro.core.placement.
   to_stages` and :func:`~repro.core.latency.evaluate`.
 * A string-keyed registry — ``get_planner("ould-ilp" | "ould-dp" |
-  "ould-mp" | "nearest" | "hrm" | "nearest-hrm" | "incremental")`` — so
-  runtimes and benchmarks iterate strategies by name and a new strategy
-  (reliability-aware LLHR, a DRL policy) is a one-file plug-in:
-  ``@register_planner("my-strategy")`` and every consumer can run it.
+  "ould-dp-sparse" | "ould-mp" | "nearest" | "hrm" | "nearest-hrm" |
+  "incremental" | "incremental-sparse")`` — so runtimes and benchmarks
+  iterate strategies by name and a new strategy (reliability-aware LLHR, a
+  DRL policy) is a one-file plug-in: ``@register_planner("my-strategy")``
+  and every consumer can run it.
+
+``ould-dp-sparse`` / ``incremental-sparse`` pin the k-candidate pruned DP
+engine (sub-quadratic in swarm size; admission-identical to the dense DP
+via its fallback ladder) — the N ≥ 50 serving regime; ``sparse_k``
+overrides the √N default candidate budget.
 
 Planner constructors accept a *uniform* option set and ignore options they
 do not consume (``HeuristicPlanner`` ignores ``solver=``), so registry-driven
@@ -254,13 +260,15 @@ class OuldPlanner(_PlannerBase):
                  include_compute: bool = False, tight: bool = True,
                  gamma_relaxed: bool = True, time_limit: float | None = None,
                  mip_rel_gap: float = 1e-6,
-                 max_path_cost: float | None = None, **_ignored: Any):
+                 max_path_cost: float | None = None,
+                 sparse_k: int | None = None, **_ignored: Any):
         self.name = name or f"ould-{solver}"
         self.view_kinds = view_kinds
         self.solver = solver
         self._kw = dict(include_compute=include_compute, tight=tight,
                         gamma_relaxed=gamma_relaxed, time_limit=time_limit,
-                        mip_rel_gap=mip_rel_gap, max_path_cost=max_path_cost)
+                        mip_rel_gap=mip_rel_gap, max_path_cost=max_path_cost,
+                        sparse_k=sparse_k)
         self._constraint_cache: dict = {}
 
     def plan(self, problem: Problem, view: TopologyView, *,
@@ -269,7 +277,8 @@ class OuldPlanner(_PlannerBase):
         bound = view.bind(problem)
         sol = solve_ould(bound, solver=self.solver,  # type: ignore[arg-type]
                          constraint_cache=self._constraint_cache, **self._kw)
-        return Plan(sol, self.name, view.kind, bound)
+        return Plan(sol, self.name, view.kind, bound,
+                    solve_stats=sol.dp_stats)
 
 
 class HeuristicPlanner(_PlannerBase):
@@ -312,7 +321,8 @@ class IncrementalPlanner(_PlannerBase):
                  view_kinds: tuple[str, ...] | None = None, warm: bool = True,
                  rel_change: float = 0.05, price_rel_change: float = 0.0,
                  max_path_cost: float | None = None,
-                 include_compute: bool = False, **_ignored: Any):
+                 include_compute: bool = False,
+                 sparse_k: int | None = None, **_ignored: Any):
         self.name = name
         if view_kinds is not None:
             self.view_kinds = view_kinds
@@ -322,6 +332,7 @@ class IncrementalPlanner(_PlannerBase):
         self.price_rel_change = price_rel_change
         self.max_path_cost = max_path_cost
         self.include_compute = include_compute
+        self.sparse_k = sparse_k
         self._inc: IncrementalSolver | None = None
         self._pool_key: tuple | None = None
 
@@ -338,7 +349,8 @@ class IncrementalPlanner(_PlannerBase):
                 rel_change=self.rel_change,
                 price_rel_change=self.price_rel_change,
                 max_path_cost=self.max_path_cost,
-                rate_unit_bytes=problem.rate_unit_bytes)
+                rate_unit_bytes=problem.rate_unit_bytes,
+                sparse_k=self.sparse_k)
             self._pool_key = key
         return self._inc
 
@@ -412,6 +424,7 @@ def _fixed_solver(solver: str, name: str):
 
 register_planner("ould-ilp", _fixed_solver("ilp", "ould-ilp"))
 register_planner("ould-dp", _fixed_solver("dp", "ould-dp"))
+register_planner("ould-dp-sparse", _fixed_solver("dp-sparse", "ould-dp-sparse"))
 register_planner("nearest", lambda **o: HeuristicPlanner("nearest", **o))
 register_planner("hrm", lambda **o: HeuristicPlanner("hrm", **o))
 register_planner(
@@ -420,6 +433,15 @@ register_planner(
 register_planner(
     "incremental",
     lambda **o: IncrementalPlanner(**{"solver": "dp", **o}))
+
+
+@register_planner("incremental-sparse")
+def _incremental_sparse_factory(**o: Any) -> Planner:
+    """Warm-started planner over the pruned k-candidate DP: the registry
+    name pins the engine (a caller-supplied ``solver`` option from a uniform
+    registry-sweep dict is ignored)."""
+    o.pop("solver", None)
+    return IncrementalPlanner("dp-sparse", name="incremental-sparse", **o)
 
 
 @register_planner("ould-mp")

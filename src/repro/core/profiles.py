@@ -43,21 +43,21 @@ class ModelProfile:
 
     @property
     def total_memory(self) -> float:
-        return sum(l.memory_bytes for l in self.layers)
+        return sum(ly.memory_bytes for ly in self.layers)
 
     @property
     def total_flops(self) -> float:
-        return sum(l.compute_flops for l in self.layers)
+        return sum(ly.compute_flops for ly in self.layers)
 
     def memory_vector(self) -> list[float]:
-        return [l.memory_bytes for l in self.layers]
+        return [ly.memory_bytes for ly in self.layers]
 
     def compute_vector(self) -> list[float]:
-        return [l.compute_flops for l in self.layers]
+        return [ly.compute_flops for ly in self.layers]
 
     def output_vector(self) -> list[float]:
         """K_j for j = 1..M (K_M is the classification result, tiny)."""
-        return [l.output_bytes for l in self.layers]
+        return [ly.output_bytes for ly in self.layers]
 
 
 # ---------------------------------------------------------------------------

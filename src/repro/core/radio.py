@@ -88,7 +88,6 @@ class TpuLinkModel:
         the same pod, DCN bandwidth across pods.  No interference term —
         point-to-point ICI links are contention-free per direction.
         """
-        n = coords.shape[0]
         tx, ty = self.torus
         dx = np.abs(coords[:, None, 0] - coords[None, :, 0])
         dy = np.abs(coords[:, None, 1] - coords[None, :, 1])

@@ -44,7 +44,8 @@ def ssd_scan_chunked(x: jax.Array, a: jax.Array, b: jax.Array, c: jax.Array,
     Q = min(chunk, S)
     if S % Q:
         pad = Q - S % Q
-        zf = lambda t: jnp.pad(t, [(0, 0), (0, pad)] + [(0, 0)] * (t.ndim - 2))
+        def zf(t):
+            return jnp.pad(t, [(0, 0), (0, pad)] + [(0, 0)] * (t.ndim - 2))
         x, b, c = zf(x), zf(b), zf(c)
         a = jnp.pad(a, [(0, 0), (0, pad), (0, 0)], constant_values=1.0)
     Sp = x.shape[1]

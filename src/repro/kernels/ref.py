@@ -99,7 +99,8 @@ def attention_banded(q: jax.Array, k: jax.Array, v: jax.Array, *,
     scale = scale if scale is not None else D ** -0.5
     pad = (-S) % w
     if pad:
-        zf = lambda t: jnp.pad(t, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        def zf(t):
+            return jnp.pad(t, ((0, 0), (0, pad), (0, 0), (0, 0)))
         q, k, v = zf(q), zf(k), zf(v)
     Sp = S + pad
     nc = Sp // w
@@ -109,8 +110,8 @@ def attention_banded(q: jax.Array, k: jax.Array, v: jax.Array, *,
     kc = k.astype(jnp.float32).reshape(B, nc, w, Hkv, D)
     vc = v.astype(jnp.float32).reshape(B, nc, w, Hkv, D)
     # band for chunk i: [chunk i-1 | chunk i]  (chunk -1 zero-padded)
-    prev = lambda t: jnp.concatenate(
-        [jnp.zeros_like(t[:, :1]), t[:, :-1]], axis=1)
+    def prev(t):
+        return jnp.concatenate([jnp.zeros_like(t[:, :1]), t[:, :-1]], axis=1)
     kb = jnp.concatenate([prev(kc), kc], axis=2)        # (B, nc, 2w, Hkv, D)
     vb = jnp.concatenate([prev(vc), vc], axis=2)
     logits = jnp.einsum("bcqhgd,bckhd->bchgqk", qf, kb)  # (B,nc,Hkv,g,w,2w)

@@ -31,7 +31,8 @@ def ssd_scan_pallas(x, a, b, c, h0=None, *, chunk=256, interpret=False):
     Q = min(chunk, S)
     pad = (Q - S % Q) % Q
     if pad:
-        zf = lambda t: jnp.pad(t, [(0, 0), (0, pad)] + [(0, 0)] * (t.ndim - 2))
+        def zf(t):
+            return jnp.pad(t, [(0, 0), (0, pad)] + [(0, 0)] * (t.ndim - 2))
         x, b, c = zf(x), zf(b), zf(c)
         a = jnp.pad(a, [(0, 0), (0, pad), (0, 0)], constant_values=1.0)
     Sp = S + pad

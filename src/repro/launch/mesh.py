@@ -3,9 +3,8 @@ jax device state (the dry-run must set XLA_FLAGS before any jax init)."""
 
 from __future__ import annotations
 
-import numpy as np
-
 import jax
+import numpy as np
 from jax.sharding import Mesh
 
 from ..parallel.sharding import MeshAxes

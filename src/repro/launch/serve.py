@@ -21,6 +21,9 @@ def main() -> None:
                     help="registered placement strategy for the pool "
                          "(see repro.core.available_planners())")
     ap.add_argument("--pool-nodes", type=int, default=8)
+    ap.add_argument("--sparse-k", type=int, default=None,
+                    help="candidate budget for the *-sparse planners "
+                         "(default: ceil(sqrt(pool nodes)))")
     args = ap.parse_args()
 
     import jax
@@ -50,12 +53,19 @@ def main() -> None:
     plan, ev = schedule_requests(
         C.get_config(args.arch), n_nodes=n, requests=args.batch,
         hbm_bytes=16e9 * 16, flops_budget=197e12 * 10,
-        rates_bits=rates_bits, planner=args.planner)
+        rates_bits=rates_bits, planner=args.planner,
+        sparse_k=args.sparse_k)
+    sparse = ""
+    if plan.solve_stats is not None and plan.solve_stats.k:
+        st = plan.solve_stats
+        sparse = (f" sparse[k={st.k} pruned={st.pruned_fraction:.2f} "
+                  f"dense_fallbacks={st.n_dense_fallback}]")
     print(f"[serve] placement planner={plan.planner_name} "
           f"view={plan.view_kind} status={plan.status} "
           f"admitted={plan.n_admitted}/{args.batch} "
           f"comm={ev.comm_latency_s * 1e6:.1f}us "
-          f"stages(req0)={len(plan.stages(0)) if plan.admitted[0] else 0}")
+          f"stages(req0)={len(plan.stages(0)) if plan.admitted[0] else 0}"
+          + sparse)
 
 
 if __name__ == "__main__":

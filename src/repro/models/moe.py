@@ -142,7 +142,8 @@ def _moe_shard_map(p: dict, cfg: ModelConfig, x2: jax.Array, mesh, axes):
     t_loc = T // dsize
     cap = max(1, int(t_loc * K * m.capacity_factor / E))
     if E_pad != E:
-        padw = lambda w: jnp.pad(w, ((0, E_pad - E), (0, 0), (0, 0)))
+        def padw(w):
+            return jnp.pad(w, ((0, E_pad - E), (0, 0), (0, 0)))
         p = {**p, "w_gate": padw(p["w_gate"]), "w_in": padw(p["w_in"]),
              "w_out": padw(p["w_out"])}
 

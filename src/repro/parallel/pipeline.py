@@ -42,7 +42,6 @@ def pipeline_forward(block_fn: Callable, params_stacked, x, *, mesh: Mesh,
     mb = B // n_micro
     L = jax.tree.leaves(params_stacked)[0].shape[0]
     assert L % n_stages == 0
-    per_stage = L // n_stages
 
     def stage_fn(p_local, x_all):
         """p_local: params slice (per_stage, ...); x_all: (B, ...) full batch

@@ -25,7 +25,7 @@ import dataclasses
 
 import numpy as np
 
-from ..core import Problem, Solution, solve_ould
+from ..core import Problem, solve_ould
 from ..core.placement import Stage, to_stages
 from ..core.profiles import ModelProfile
 from ..core.radio import TpuLinkModel

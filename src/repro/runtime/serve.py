@@ -20,7 +20,6 @@ from ..configs.base import ModelConfig
 from ..core import Problem, ResolveStats
 from ..core.planner import Plan, Planner, TopologyView, get_planner, make_view
 from ..core.profiles import lm_profile
-from ..models import transformer
 from . import steps as steps_mod
 
 
@@ -107,10 +106,13 @@ class AdmissionController:
 def schedule_requests(cfg: ModelConfig, *, n_nodes: int, requests: int,
                       hbm_bytes: float, flops_budget: float,
                       rates_bits: np.ndarray, seq: int = 2048,
-                      planner: str = "ould-dp") -> tuple[Plan, Any]:
+                      planner: str = "ould-dp",
+                      **planner_options: Any) -> tuple[Plan, Any]:
     """Place R concurrent serving requests' layer groups over the pool —
     the paper's multi-request placement applied to inference serving, via
-    any registered planner.  Returns (Plan, Evaluation)."""
+    any registered planner (``planner_options`` configure it, e.g.
+    ``sparse_k`` for the pruned-DP strategies).  Returns
+    (Plan, Evaluation)."""
     profile = lm_profile(
         cfg.name, n_layers=cfg.n_layers, d_model=cfg.d_model,
         n_heads=cfg.n_heads, n_kv=cfg.n_kv, d_ff=cfg.d_ff, vocab=cfg.vocab,
@@ -121,5 +123,6 @@ def schedule_requests(cfg: ModelConfig, *, n_nodes: int, requests: int,
                    np.full(n_nodes, flops_budget), rates_bits,
                    sources.astype(np.int64),
                    compute_speed=np.full(n_nodes, 197e12))
-    plan = get_planner(planner).plan(prob, make_view(rates_bits))
+    plan = get_planner(planner, **planner_options).plan(
+        prob, make_view(rates_bits))
     return plan, plan.evaluate()

@@ -8,11 +8,9 @@ sharding are applied at the jit boundary in ``launch/``.
 from __future__ import annotations
 
 import dataclasses
-import functools
 from typing import Any
 
 import jax
-import jax.numpy as jnp
 
 from ..configs.base import ModelConfig
 from ..models import transformer

@@ -36,11 +36,13 @@ simulator's epoch loop is strategy-agnostic — it builds the richest
 :class:`~repro.core.planner.TopologyView` each planner prefers (a predicted
 horizon for ``ould-mp``, the fresh snapshot otherwise) and calls
 ``plan()`` through one :class:`~repro.runtime.serve.AdmissionController`.
-``incremental`` is the warm-started snapshot OULD of PR 1; ``ould-mp`` the
-horizon objective; ``nearest``/``hrm``/``nearest-hrm`` the stateless §IV-A
-heuristics.  All policies consume the identical event tape (same seed ⇒
-same arrivals, holds, churn, trajectories), so per-request metrics are
-paired.
+``incremental`` is the warm-started snapshot OULD of PR 1;
+``incremental-sparse`` the same warm loop over the k-candidate pruned DP
+(the N ≥ 50 engine; ``SwarmScenario.sparse_k`` overrides its √N candidate
+budget); ``ould-mp`` the horizon objective; ``nearest``/``hrm``/
+``nearest-hrm`` the stateless §IV-A heuristics.  All policies consume the
+identical event tape (same seed ⇒ same arrivals, holds, churn,
+trajectories), so per-request metrics are paired.
 """
 
 from __future__ import annotations
@@ -59,7 +61,8 @@ from ..core.radio import RadioParams, rate_matrix
 from .serve import AdmissionController
 
 # Canonical registry names for the scenario matrix …
-PLANNER_POLICIES = ("incremental", "ould-mp", "nearest", "hrm", "nearest-hrm")
+PLANNER_POLICIES = ("incremental", "incremental-sparse", "ould-mp", "nearest",
+                    "hrm", "nearest-hrm")
 # … and the PR-1 policy aliases they replaced (kept for one release).
 POLICY_ALIASES = {"ould": "incremental", "ould_mp": "ould-mp",
                   "nearest_hrm": "nearest-hrm"}
@@ -93,6 +96,7 @@ class SwarmScenario:
     mttr_s: float = 30.0
     rel_change: float = 0.05       # incremental-solver link-drift threshold
     max_path_cost_s: float = 1e6   # admission bar: reject _BIG-priced paths
+    sparse_k: int | None = None    # k-candidate budget for *-sparse planners
     radio: RadioParams = RadioParams()
 
     def mobility(self, seed: int) -> MultiGroupMobility:
@@ -251,7 +255,8 @@ def simulate(scn: SwarmScenario, policy: str, seed: int = 0, *,
     ctrl = AdmissionController(planner_name, solver="dp",
                                warm=not cold_resolves,
                                rel_change=scn.rel_change,
-                               max_path_cost=scn.max_path_cost_s)
+                               max_path_cost=scn.max_path_cost_s,
+                               sparse_k=scn.sparse_k)
     wants_horizon = getattr(ctrl.planner, "preferred_view",
                             "snapshot") == "horizon"
 

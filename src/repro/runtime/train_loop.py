@@ -24,7 +24,6 @@ import time
 from typing import Any, Callable
 
 import jax
-import numpy as np
 
 from ..checkpointing import AsyncCheckpointer, CheckpointManager
 from ..configs.base import ModelConfig

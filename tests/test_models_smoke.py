@@ -8,8 +8,7 @@ import numpy as np
 import pytest
 
 import repro.configs as C
-from repro.models import (decode_step, forward, init_params, loss_fn,
-                          prefill)
+from repro.models import decode_step, forward, init_params, prefill
 from repro.runtime import TrainConfig, init_opt_state, make_train_step
 
 KEY = jax.random.PRNGKey(0)

@@ -5,9 +5,7 @@ import dataclasses
 import tempfile
 
 import jax
-import jax.numpy as jnp
 import numpy as np
-import pytest
 
 import repro.configs as C
 from repro.checkpointing import AsyncCheckpointer, CheckpointManager
@@ -16,7 +14,7 @@ from repro.data import DataConfig, DataLoader
 from repro.models import init_params
 from repro.optim import AdamWConfig
 from repro.runtime import TrainConfig, elastic, train_loop
-from repro.runtime.serve import Server, ServeConfig
+from repro.runtime.serve import ServeConfig, Server
 
 CFG = C.get_config("internlm2_1p8b").reduced(n_layers=2, d_model=64,
                                              vocab=512)

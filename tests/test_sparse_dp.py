@@ -1,0 +1,296 @@
+"""Sparse k-candidate DP (`ould-dp-sparse`): equivalence with the dense DP.
+
+The contract under test (ISSUE 3 / DESIGN §2):
+* k ≥ N ⇒ bit-identical assignments, admission and objective to ``ould-dp``;
+* default k (⌈√N⌉) ⇒ the *same admission set* on fixed seeds (the fallback
+  ladder re-runs a rejected request with k doubled, dense last) and a small
+  (≤ 5 %) objective gap;
+* the per-source stage cache inside the placer is invisible: clearing it
+  before every placement must not change a single path or cost;
+* the ``IncrementalSolver`` warm path re-places touched requests with the
+  same pruned kernel and reproduces the cold sparse solve when everything
+  is re-placed.
+"""
+
+import dataclasses
+
+import numpy as np
+import pytest
+
+from repro.core import (IncrementalSolver, Problem, SnapshotView,
+                        available_planners, default_sparse_k, get_planner,
+                        lenet_profile, rate_matrix, solve_ould)
+from repro.core.mobility import RPGMobility, RPGParams
+from repro.core.ould import _SparsePlacer
+from repro.core.profiles import LayerProfile, ModelProfile
+
+MB = 1e6
+
+
+def _swarm(n=50, requests=16, seed=0, area=300.0, mem_mb=512.0,
+           comp=95e9, hotspots=5):
+    mob = RPGMobility(RPGParams(n_uavs=n, area_m=area, homogeneous=True),
+                      seed=seed)
+    rates = rate_matrix(mob.positions(1, seed=seed)[0])
+    rng = np.random.default_rng(seed)
+    src = rng.integers(0, min(hotspots, n), requests).astype(np.int64)
+    return Problem(lenet_profile(), np.full(n, mem_mb * MB),
+                   np.full(n, comp), rates, src, np.full(n, 9.5e9))
+
+
+def _tight(n=12, requests=8, seed=0, mem_cap=30.0):
+    """Toy instance with real contention: repairs, spreads and rejections."""
+    prof = ModelProfile("toy", tuple(
+        LayerProfile(f"l{j}", 10.0, 1.0, [8.0, 4.0, 2.0, 1.0][j])
+        for j in range(4)), input_bytes=16.0)
+    rng = np.random.default_rng(seed)
+    pos = rng.uniform(0, 120, (n, 3))
+    pos[:, 2] = 50.0
+    src = rng.integers(0, n, requests).astype(np.int64)
+    return Problem(prof, np.full(n, mem_cap), np.full(n, 40.0),
+                   rate_matrix(pos), src)
+
+
+# ---------------------------------------------------------------------------
+# dense equivalence
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("seed", [0, 1, 2])
+def test_bit_identical_to_dense_at_k_ge_n(seed):
+    for prob in (_swarm(n=20, requests=8, seed=seed),
+                 _tight(seed=seed)):
+        dense = solve_ould(prob, solver="dp")
+        sparse = solve_ould(prob, solver="dp-sparse",
+                            sparse_k=prob.n_nodes)
+        np.testing.assert_array_equal(sparse.assign, dense.assign)
+        np.testing.assert_array_equal(sparse.admitted, dense.admitted)
+        assert sparse.objective == dense.objective
+
+
+@pytest.mark.parametrize("n,requests,seeds", [
+    (50, 16, (0, 1, 2, 3)),
+    (64, 24, (0, 1, 2)),
+    (128, 32, (0, 1, 2)),
+])
+def test_default_k_equal_admission_and_small_gap(n, requests, seeds):
+    for seed in seeds:
+        prob = _swarm(n=n, requests=requests, seed=seed)
+        dense = solve_ould(prob, solver="dp")
+        sparse = solve_ould(prob, solver="dp-sparse")
+        np.testing.assert_array_equal(sparse.admitted, dense.admitted)
+        if dense.objective > 0:
+            gap = abs(sparse.objective - dense.objective) / dense.objective
+            assert gap <= 0.05, f"seed={seed}: gap {gap:.4f}"
+        assert sparse.dp_stats is not None
+        assert sparse.dp_stats.k == default_sparse_k(n)
+
+
+def test_fallback_ladder_preserves_admission_at_tiny_k():
+    """k=1 prunes aggressively; the ladder (k doubling, dense last resort)
+    must still admit exactly what the dense solver admits."""
+    for seed in range(4):
+        prob = _tight(seed=seed)
+        dense = solve_ould(prob, solver="dp", max_path_cost=1e6)
+        sparse = solve_ould(prob, solver="dp-sparse", sparse_k=1,
+                            max_path_cost=1e6)
+        np.testing.assert_array_equal(sparse.admitted, dense.admitted)
+
+
+def test_ladder_escalates_off_dead_link_without_admission_bar():
+    """Two radio clusters joined by a single bridge node: with small k the
+    bridge is crowded out of the candidate sets by feasible near nodes, so
+    the pruned DP only sees a ``_BIG``-priced route.  The ladder must widen
+    k (no ``max_path_cost`` required) until it finds the finite bridge path
+    the dense DP finds."""
+    rng = np.random.default_rng(0)
+    nA, nB = 10, 9
+    posA = np.column_stack([rng.uniform(0, 60, nA), rng.uniform(0, 60, nA),
+                            np.full(nA, 50.0)])
+    bridge = np.array([[250.0, 30.0, 50.0]])
+    posB = np.column_stack([rng.uniform(440, 500, nB),
+                            rng.uniform(0, 60, nB), np.full(nB, 50.0)])
+    pos = np.vstack([posA, bridge, posB])      # bridge idx 10, B = 11..19
+    n = pos.shape[0]
+    prof = ModelProfile("toy", tuple(
+        LayerProfile(f"l{j}", 10.0, [1.0, 1.0, 1.0, 100.0][j],
+                     [8.0, 4.0, 2.0, 1.0][j]) for j in range(4)),
+        input_bytes=16.0)
+    comp = np.full(n, 50.0)
+    comp[nA + 1:] = 200.0      # the final layer only fits in cluster B
+    prob = Problem(prof, np.full(n, 100.0), comp, rate_matrix(pos),
+                   np.zeros(2, np.int64))
+    dense = solve_ould(prob, solver="dp")
+    sparse = solve_ould(prob, solver="dp-sparse", sparse_k=4)
+    assert dense.objective < 1.0               # finite route via the bridge
+    assert sparse.objective == pytest.approx(dense.objective)
+    assert sparse.dp_stats.n_escalations > 0   # the ladder actually widened
+    np.testing.assert_array_equal(sparse.admitted, dense.admitted)
+
+
+def test_sparse_stats_telemetry():
+    prob = _swarm(n=50, requests=16)
+    sparse = solve_ould(prob, solver="dp-sparse")
+    st = sparse.dp_stats
+    assert st is not None and st.k == default_sparse_k(50)
+    assert 0.0 <= st.pruned_fraction < 1.0
+    assert st.n_escalations >= 0 and st.n_dense_fallback >= 0
+    assert solve_ould(prob, solver="dp").dp_stats is None
+
+
+# ---------------------------------------------------------------------------
+# the stage cache is invisible (white-box)
+# ---------------------------------------------------------------------------
+
+def _place_all(prob, k, clear_cache):
+    spb = prob.transfer_cost()
+    prof = prob.profile
+    mem_left = prob.mem_cap.astype(float).copy()
+    comp_left = prob.comp_cap.astype(float).copy()
+    placer = _SparsePlacer(spb, prof.output_vector(), prof.input_bytes,
+                           prof.memory_vector(), prof.compute_vector(),
+                           mem_left, comp_left, None, k=k,
+                           max_path_cost=1e6)
+    out = []
+    for r in range(prob.n_requests):
+        if clear_cache:
+            placer._cache.clear()
+        path, cost = placer.place(int(prob.sources[r]))
+        admitted = path is not None and cost <= 1e6
+        if admitted:
+            placer.commit(path)
+        out.append((None if path is None else path.tolist(), cost, admitted))
+    return out, placer.n_cache_hits
+
+
+@pytest.mark.parametrize("seed", range(5))
+def test_stage_cache_replay_is_exact(seed):
+    """Same paths, costs and admissions with the per-source cache replayed
+    or cleared before every placement — contention included (repairs,
+    escalations, feasibility flips)."""
+    for prob, k in ((_tight(n=14, requests=12, seed=seed), 2),
+                    (_swarm(n=40, requests=20, seed=seed, hotspots=3), 6)):
+        cached, hits = _place_all(prob, k, clear_cache=False)
+        fresh, no_hits = _place_all(prob, k, clear_cache=True)
+        assert cached == fresh
+        assert no_hits == 0
+
+
+def test_stage_cache_actually_hits():
+    prob = _swarm(n=50, requests=24, hotspots=3)
+    _, hits = _place_all(prob, default_sparse_k(50), clear_cache=False)
+    assert hits > 0      # hotspot sources repeat: replay must kick in
+
+
+# ---------------------------------------------------------------------------
+# warm (IncrementalSolver) path
+# ---------------------------------------------------------------------------
+
+def test_warm_sparse_resolve_matches_cold_sparse():
+    """Big drift ⇒ every request re-placed ⇒ the warm re-solve must equal a
+    cold dp-sparse solve on the drifted topology (same order, same residual
+    sequence, same pruned kernel)."""
+    prob = _swarm(n=40, requests=16, seed=2)
+    mob = RPGMobility(RPGParams(n_uavs=40, area_m=300.0, homogeneous=True),
+                      seed=2)
+    pos = mob.positions(40, seed=5)
+    inc = IncrementalSolver(prob.profile, prob.mem_cap, prob.comp_cap,
+                            prob.compute_speed, solver="dp-sparse")
+    inc.solve(prob.rates, prob.sources)
+    for t in (20, 39):
+        drift = rate_matrix(pos[t])
+        warm, stats = inc.resolve(drift, prob.sources)
+        cold = solve_ould(dataclasses.replace(prob, rates=drift),
+                          solver="dp-sparse")
+        assert stats.k == default_sparse_k(40)
+        np.testing.assert_array_equal(warm.admitted, cold.admitted)
+        assert warm.objective == pytest.approx(cold.objective, rel=1e-12)
+
+
+def test_warm_sparse_keeps_placements_without_drift():
+    prob = _swarm(n=40, requests=16)
+    inc = IncrementalSolver(prob.profile, prob.mem_cap, prob.comp_cap,
+                            prob.compute_speed, solver="dp-sparse")
+    cold, _ = inc.solve(prob.rates, prob.sources)
+    warm, stats = inc.resolve(prob.rates, prob.sources)
+    assert stats.n_kept == int(cold.admitted.sum())
+    assert stats.n_replaced == prob.n_requests - stats.n_kept
+    np.testing.assert_array_equal(warm.assign, cold.assign)
+    assert warm.solver == "dp-sparse-warm"
+
+
+def test_warm_sparse_admission_matches_warm_dense():
+    """On a fixed drift sequence the sparse warm loop admits the same
+    streams as the dense warm loop (the ladder guarantee, composed with
+    keep/re-place)."""
+    prob = _swarm(n=50, requests=20, seed=3)
+    mob = RPGMobility(RPGParams(n_uavs=50, area_m=300.0, homogeneous=True),
+                      seed=3)
+    pos = mob.positions(30, seed=7)
+    dense = IncrementalSolver(prob.profile, prob.mem_cap, prob.comp_cap,
+                              prob.compute_speed, solver="dp")
+    sparse = IncrementalSolver(prob.profile, prob.mem_cap, prob.comp_cap,
+                               prob.compute_speed, solver="dp-sparse")
+    dense.solve(prob.rates, prob.sources)
+    sparse.solve(prob.rates, prob.sources)
+    for t in (10, 29):
+        drift = rate_matrix(pos[t])
+        wd, _ = dense.resolve(drift, prob.sources)
+        ws, _ = sparse.resolve(drift, prob.sources)
+        assert ws.n_admitted == wd.n_admitted
+
+
+# ---------------------------------------------------------------------------
+# planner registry plumbing
+# ---------------------------------------------------------------------------
+
+def test_registry_exposes_sparse_planners():
+    assert {"ould-dp-sparse", "incremental-sparse"} <= set(available_planners())
+    prob = _swarm(n=30, requests=8)
+    plan = get_planner("ould-dp-sparse").plan(prob, SnapshotView(prob.rates))
+    assert plan.planner_name == "ould-dp-sparse"
+    assert plan.solve_stats is not None and plan.solve_stats.k > 0
+    ref = solve_ould(prob, solver="dp-sparse")
+    np.testing.assert_array_equal(plan.assign, ref.assign)
+
+
+def test_sparse_k_option_threads_through_registry():
+    prob = _swarm(n=30, requests=8)
+    plan = get_planner("ould-dp-sparse", sparse_k=30).plan(
+        prob, SnapshotView(prob.rates))
+    dense = solve_ould(prob, solver="dp")
+    np.testing.assert_array_equal(plan.assign, dense.assign)
+    assert plan.objective == dense.objective
+
+
+def test_incremental_sparse_pins_engine_against_option_sweep():
+    # Registry sweeps pass one uniform option dict (solver="dp" included);
+    # the name must still pin the sparse engine.
+    planner = get_planner("incremental-sparse", solver="dp", sparse_k=6)
+    assert planner.solver == "dp-sparse"
+    assert planner.sparse_k == 6
+    prob = _swarm(n=30, requests=8)
+    plan = planner.plan(prob, SnapshotView(prob.rates))
+    assert plan.planner_name == "incremental-sparse"
+    assert plan.solve_stats.k == 6
+
+
+def test_ould_mp_can_run_the_sparse_engine():
+    prob = _swarm(n=30, requests=8)
+    mob = RPGMobility(RPGParams(n_uavs=30, area_m=300.0, homogeneous=True),
+                      seed=0)
+    horizon = mob.predicted_rates(4, seed=1)
+    hp = dataclasses.replace(prob, rates=horizon)
+    from repro.core import HorizonView
+    plan = get_planner("ould-mp", solver="dp-sparse").plan(
+        hp, HorizonView(horizon))
+    ref = solve_ould(hp, solver="dp-sparse")
+    np.testing.assert_array_equal(plan.assign, ref.assign)
+    assert plan.objective == ref.objective
+
+
+def test_swarm_scenario_sparse_knob_plumbs_to_planner():
+    from repro.runtime.serve import AdmissionController
+    ctrl = AdmissionController("incremental-sparse", solver="dp",
+                               sparse_k=5)
+    assert ctrl.planner.solver == "dp-sparse"
+    assert ctrl.planner.sparse_k == 5

@@ -1,7 +1,5 @@
 """Unit tests: profiles, optimizer, sharding rules, radio model."""
 
-import math
-
 import jax
 import jax.numpy as jnp
 import numpy as np
@@ -17,7 +15,7 @@ def test_lenet_profile_structure():
     p = lenet_profile()
     assert p.num_layers == 7                       # paper: LeNet = 7 units
     assert p.total_memory < 512e6                  # fits a high-mem node
-    assert all(l.output_bytes > 0 for l in p.layers)
+    assert all(ly.output_bytes > 0 for ly in p.layers)
 
 
 def test_vgg16_profile_structure():
@@ -82,7 +80,6 @@ def test_grad_clip_bounds_update():
 
 
 def test_sharding_rules_divisibility_guard():
-    import os
     from jax.sharding import Mesh, PartitionSpec as P
     from repro.parallel import sharding as sh
     devs = np.array(jax.devices()[:1]).reshape(1, 1)

@@ -2,7 +2,6 @@
 inference over a simulated swarm) and placement↔sharding integration."""
 
 import jax
-import jax.numpy as jnp
 import numpy as np
 
 from repro.core import (Problem, evaluate, lenet_profile, solve_ould,
