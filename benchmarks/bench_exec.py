@@ -1,0 +1,274 @@
+"""Plan-faithful execution engine (repro.exec): equivalence, dedup,
+pipelined non-uniform cuts, and measured-latency calibration.
+
+Claims:
+  E1  the engine's output is numerically equivalent to sequential
+      ``apply_layers`` for every plan in a fixed-seed scenario matrix —
+      uniform and non-uniform cuts, several registered planners;
+  E2  shared-stage dedup: hotspot requests with identical placements run as
+      ONE batched launch per stage instead of one launch per request, with
+      numerics pinned to the sequential reference.  The launch-count
+      reduction (R× fewer dispatches — the real-swarm win, where each
+      launch is a scheduling round-trip) is the exact lock; wall clock is
+      reported as ungated ``_info`` metrics and is *not* claimed to improve
+      here — on the forced 8-virtual-device CPU mesh the sharded batch pays
+      collective overhead on shared physical cores and typically lands
+      ~0.7–1× of the loop;
+  E3  OULD's non-uniform stage cuts run *pipelined* with microbatches
+      (``pipeline_forward_stages``, padded slices + validity mask) instead
+      of falling back to sequential — correctness bool plus wall-clock on
+      the stage mesh (CI forces an 8-device CPU mesh via
+      ``XLA_FLAGS=--xla_force_host_platform_device_count=8``; regenerate the
+      baseline under the same flag for comparable stage counts);
+  E4  calibration (measured stage walls → profile compute vectors) reduces
+      predicted-vs-measured latency error on a re-solve — the ``improved``
+      boolean is the lock (the analytic FLOP model is off by a large
+      systematic factor, so the reduction survives timing noise); the
+      magnitudes are ungated ``_info``.
+
+Metric naming follows check_regression's classes: measured walls and error
+magnitudes end in ``_info`` (present, never value-gated); counts, stage
+shapes, and correctness booleans are exact and must not move under the
+pinned seeds.
+"""
+
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import (Problem, SnapshotView, Solution, get_planner,
+                        lenet_profile)
+from repro.core.planner import Plan
+from repro.core.radio import RadioParams, rate_matrix
+from repro.exec import (ExecutionEngine, calibrated_problem, compile_plan,
+                        layer_fns_for)
+from repro.parallel.pipeline import pipeline_forward_stages
+
+from .common import MB, Csv, make_network
+
+TOL = 1e-5
+FRAME_HW = (326, 595, 3)
+
+
+def _snapshot(n_uavs: int, requests: int, *, mem_mb: float, seed: int = 0,
+              hotspots: int = 3, same_source: bool = False) -> Problem:
+    mob = make_network(n_uavs, 150.0, seed=seed, homogeneous=False)
+    rates = rate_matrix(mob.positions(1, seed=seed)[0], RadioParams())
+    rng = np.random.default_rng(seed)
+    sources = (np.zeros(requests, np.int64) if same_source
+               else rng.integers(0, hotspots, requests).astype(np.int64))
+    return Problem(lenet_profile(), np.full(n_uavs, mem_mb * MB),
+                   np.full(n_uavs, 95e9), rates, sources,
+                   compute_speed=np.full(n_uavs, 9.5e9))
+
+
+def _manual_plan(prob: Problem, sizes: list[int]) -> Plan:
+    """Every request on the same non-uniform cut, one node per stage."""
+    M, R = prob.n_layers, prob.n_requests
+    assign = np.zeros((R, M), np.int64)
+    j = 0
+    for node, size in enumerate(sizes):
+        assign[:, j:j + size] = node
+        j += size
+    sol = Solution(assign, 0.0, "feasible", 0.0, np.ones(R, bool),
+                   solver="manual")
+    return Plan(sol, "manual", "snapshot", prob)
+
+
+def _is_nonuniform(plan: Plan) -> bool:
+    for r in range(plan.problem.n_requests):
+        if not plan.admitted[r]:
+            continue
+        sizes = {s.layer_end - s.layer_start for s in plan.stages(r)}
+        if len(sizes) > 1:
+            return True
+    return False
+
+
+def _bench_equivalence(csv: Csv, engine: ExecutionEngine, quick: bool) -> dict:
+    """E1: engine == sequential for every plan in the scenario matrix."""
+    rng = np.random.default_rng(0)
+    n_plans = n_nonuniform = 0
+    worst = 0.0
+    matrix = []
+    prob = _snapshot(8, 5, mem_mb=128, seed=0)
+    for name in (("ould-dp", "ould-dp-sparse", "nearest") if quick else
+                 ("ould-dp", "ould-dp-sparse", "nearest", "hrm",
+                  "nearest-hrm")):
+        matrix.append((prob, get_planner(name).plan(
+            prob, SnapshotView(prob.rates))))
+    cut_prob = _snapshot(6, 2, mem_mb=4096, seed=1)
+    for sizes in ([3, 4], [1, 4, 2], [2, 2, 1, 2]):
+        matrix.append((cut_prob, _manual_plan(cut_prob, sizes)))
+
+    for mprob, plan in matrix:
+        graph = compile_plan(plan)
+        if not graph.requests:
+            continue
+        n_plans += 1
+        n_nonuniform += int(_is_nonuniform(plan))
+        frames = rng.standard_normal(
+            (mprob.n_requests, *FRAME_HW)).astype(np.float32)
+        report = engine.run(graph, frames)
+        ref = engine.sequential_reference(frames, graph.requests)
+        worst = max(worst, max(np.abs(report.outputs[r] - ref[r]).max()
+                               for r in graph.requests))
+    ok = bool(worst < TOL)
+    csv.add("exec/claims/E1_plan_faithful", 0.0,
+            f"plans={n_plans} nonuniform={n_nonuniform} "
+            f"max_err={worst:.2e} equivalent={ok}")
+    assert ok, f"engine diverged from sequential reference: {worst}"
+    return {"n_plans": n_plans, "n_nonuniform_cuts": n_nonuniform,
+            "equivalent": ok}
+
+
+def _bench_dedup(csv: Csv, engine: ExecutionEngine, quick: bool) -> dict:
+    """E2: batched shared stages vs one-request-at-a-time execution.  The
+    batch (8 requests) divides the forced 8-device mesh, so the batched
+    launches run sharded across it (engine._device_put)."""
+    requests = 8
+    reps = 2 if quick else 3
+    prob = _snapshot(6, requests, mem_mb=4096, seed=0, same_source=True)
+    plan = _manual_plan(prob, [3, 4])      # all requests share both stages
+    frames = np.random.default_rng(1).standard_normal(
+        (requests, *FRAME_HW)).astype(np.float32)
+
+    batched_graph = compile_plan(plan)
+    solo_graphs = [compile_plan(plan, requests=[r]) for r in range(requests)]
+    launches_loop = sum(len(g.tasks) for g in solo_graphs)
+
+    # warm every shape; the mesh-sharded batched path must also stay
+    # numerically faithful to the sequential reference
+    batched_report = engine.run(batched_graph, frames)
+    ref = engine.sequential_reference(frames, batched_graph.requests)
+    sharded_ok = bool(max(np.abs(batched_report.outputs[r] - ref[r]).max()
+                          for r in batched_graph.requests) < TOL)
+    assert sharded_ok, "mesh-sharded batched execution diverged"
+    for g in solo_graphs:
+        engine.run(g, frames)
+    t_batch = min(_timed(lambda: engine.run(batched_graph, frames))
+                  for _ in range(reps))
+    t_loop = min(_timed(lambda: [engine.run(g, frames) for g in solo_graphs])
+                 for _ in range(reps))
+    speedup = t_loop / max(t_batch, 1e-12)
+    csv.add("exec/claims/E2_stage_dedup", t_batch * 1e6,
+            f"R={requests} launches {launches_loop}->"
+            f"{len(batched_graph.tasks)} loop={t_loop * 1e6:.0f}us "
+            f"dedup_ratio={speedup:.2f}x")
+    return {"requests": requests,
+            "launches_batched": len(batched_graph.tasks),
+            "launches_loop": launches_loop, "sharded_equivalent": sharded_ok,
+            "batched_wall_info": t_batch, "loop_wall_info": t_loop,
+            "dedup_ratio_info": speedup}
+
+
+def _timed(fn) -> float:
+    t0 = time.perf_counter()
+    fn()
+    return time.perf_counter() - t0
+
+
+def _bench_pipeline(csv: Csv, quick: bool) -> dict:
+    """E3: non-uniform cuts run pipelined on the stage mesh, matching the
+    sequential reference (throughput reported, correctness asserted)."""
+    from jax.sharding import Mesh
+
+    devices = jax.devices()
+    n_stages = max(1, min(4, len(devices)))
+    mesh = Mesh(np.array(devices[:n_stages]), ("stage",))
+    L, B, D = 8, 16, 192 if quick else 256
+    key = jax.random.PRNGKey(0)
+    w = jax.random.normal(key, (L, D, D)) * (D ** -0.5)
+    x = jax.random.normal(jax.random.PRNGKey(1), (B, D))
+
+    def block_fn(w_l, h):
+        return jnp.tanh(h @ w_l)
+
+    sizes = {4: [1, 3, 2, 2], 2: [3, 5], 1: [8]}[n_stages]
+    n_micro = 8
+
+    @jax.jit
+    def seq(w, x):
+        def body(h, w_l):
+            return block_fn(w_l, h), None
+        h, _ = jax.lax.scan(body, x, w)
+        return h
+
+    pipe = jax.jit(lambda w, x: pipeline_forward_stages(
+        block_fn, w, x, mesh=mesh, stage_sizes=sizes, n_micro=n_micro))
+
+    ref = jax.block_until_ready(seq(w, x))
+    out = jax.block_until_ready(pipe(w, x))
+    err = float(np.abs(np.asarray(out) - np.asarray(ref)).max())
+    matches = bool(err < TOL)
+    reps = 3 if quick else 10
+    t_seq = min(_timed(lambda: jax.block_until_ready(seq(w, x)))
+                for _ in range(reps))
+    t_pipe = min(_timed(lambda: jax.block_until_ready(pipe(w, x)))
+                 for _ in range(reps))
+    csv.add("exec/claims/E3_nonuniform_pipeline", t_pipe * 1e6,
+            f"stages={sizes} micro={n_micro} err={err:.1e} "
+            f"seq={t_seq * 1e6:.0f}us matches={matches}")
+    assert matches, f"pipelined non-uniform cut diverged: {err}"
+    return {"n_stages": n_stages, "stage_sizes": sizes, "n_micro": n_micro,
+            "matches": matches, "pipeline_wall_info": t_pipe,
+            "sequential_wall_info": t_seq}
+
+
+def _bench_calibration(csv: Csv, engine: ExecutionEngine,
+                       quick: bool) -> dict:
+    """E4: predicted-vs-measured MAE before and after a calibrated re-solve."""
+    prob = _snapshot(8, 4, mem_mb=128, seed=0)
+    frames = np.random.default_rng(2).standard_normal(
+        (4, *FRAME_HW)).astype(np.float32)
+    planner = get_planner("ould-dp")
+
+    plan = planner.plan(prob, SnapshotView(prob.rates))
+    report = engine.run(
+        compile_plan(plan), frames,
+        predicted_s=np.asarray(plan.evaluate().per_request_s))
+    mae_before = float(report.abs_error_s[list(report.outputs)].mean())
+
+    cal_prob, recon = calibrated_problem(prob, report)
+    replan = planner.plan(cal_prob, SnapshotView(prob.rates))
+    rereport = engine.run(
+        compile_plan(replan), frames,
+        predicted_s=np.asarray(replan.evaluate().per_request_s))
+    mae_after = float(rereport.abs_error_s[list(rereport.outputs)].mean())
+
+    improved = bool(mae_after < mae_before)
+    reduction = mae_before / max(mae_after, 1e-12)
+    csv.add("exec/claims/E4_calibration", mae_after * 1e6,
+            f"MAE {mae_before * 1e3:.2f}ms->{mae_after * 1e3:.2f}ms "
+            f"({reduction:.1f}x) layers={int(recon.layer_covered.sum())}/"
+            f"{recon.layer_covered.size} improved={improved}")
+    return {"layers_covered": int(recon.layer_covered.sum()),
+            "improved": improved,
+            "mae_before_info": mae_before, "mae_after_info": mae_after,
+            "layer_gap_info": float(recon.mean_layer_gap_s),
+            "mae_reduction_info": reduction}
+
+
+def run(csv: Csv, quick: bool = False) -> dict:
+    from jax.sharding import Mesh
+
+    # The engine's data mesh: every device the runtime offers (CI forces 8
+    # host CPU devices); divisible batches shard across it, the rest run
+    # on the default device.
+    mesh = Mesh(np.array(jax.devices()), ("data",))
+    engine = ExecutionEngine(
+        layer_fns_for(lenet_profile(), key=jax.random.PRNGKey(0)), mesh=mesh)
+    return {
+        "equivalence": _bench_equivalence(csv, engine, quick),
+        "dedup": _bench_dedup(csv, engine, quick),
+        "pipeline": _bench_pipeline(csv, quick),
+        "calibration": _bench_calibration(csv, engine, quick),
+    }
+
+
+if __name__ == "__main__":
+    run(Csv(), quick=True)

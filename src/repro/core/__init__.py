@@ -15,9 +15,10 @@ from .ould_mp import (MPResult, solve_offline_fixed, solve_ould_mp,
                       solve_static_resolve)
 from .placement import (Stage, balanced_stages, ould_pipeline_stages,
                         stage_boundaries, to_stages)
-from .planner import (HorizonView, IncrementalPlanner, Plan, Planner,
-                      SnapshotView, TopologyView, available_planners,
-                      get_planner, make_view, register_planner)
+from .planner import (HorizonView, IncrementalPlanner, NoisyHorizonView,
+                      Plan, Planner, SnapshotView, StaleView, TopologyView,
+                      available_planners, get_planner, make_view,
+                      register_planner)
 from .profiles import (LayerProfile, ModelProfile, lenet_profile, lm_profile,
                        vgg16_profile)
 from .radio import RadioParams, TpuLinkModel, rate_matrix, sinr_matrix
@@ -25,9 +26,11 @@ from .radio import RadioParams, TpuLinkModel, rate_matrix, sinr_matrix
 __all__ = [
     "ChurnEvent", "Evaluation", "Event", "EventKind", "EventQueue",
     "HorizonView", "IncrementalPlanner", "IncrementalSolver", "LayerProfile",
-    "MPResult", "ModelProfile", "MultiGroupMobility", "Plan", "Planner",
+    "MPResult", "ModelProfile", "MultiGroupMobility", "NoisyHorizonView",
+    "Plan", "Planner",
     "Problem", "RPGMobility", "RPGParams", "RadioParams", "ResolveStats",
-    "SnapshotView", "Solution", "Stage", "TopologyView", "TpuLinkModel",
+    "SnapshotView", "Solution", "Stage", "StaleView", "TopologyView",
+    "TpuLinkModel",
     "available_planners", "balanced_stages", "churn_events",
     "default_sparse_k", "evaluate",
     "get_planner", "incremental_transfer_cost", "lenet_profile",

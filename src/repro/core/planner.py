@@ -146,6 +146,46 @@ def make_view(rates: np.ndarray,
 
 
 # ---------------------------------------------------------------------------
+# Degraded views — the prediction-quality axis (ROADMAP)
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class StaleView(SnapshotView):
+    """A snapshot the planner *believes* is current but was captured
+    ``age_ticks`` earlier.  ``kind`` stays ``"snapshot"`` — staleness is
+    invisible to the strategy, which is the point: serving happens on the
+    realized topology, so the gap between the two prices the value of fresh
+    link estimates.  The caller supplies the old rate matrix (it owns the
+    history); ``age_ticks`` is provenance."""
+
+    age_ticks: int = 0
+
+
+@dataclasses.dataclass(frozen=True)
+class NoisyHorizonView(HorizonView):
+    """A predicted horizon whose rates carry multiplicative lognormal error
+    — imperfect mobility prediction.  ``noise_std`` is the σ of the
+    mean-preserving perturbation ``exp(N(−σ²/2, σ))`` applied per entry;
+    the planner sees only the corrupted rates (``kind`` stays
+    ``"horizon"``)."""
+
+    noise_std: float = 0.0
+
+    @classmethod
+    def corrupt(cls, view: HorizonView, noise_std: float,
+                seed: int = 0) -> "NoisyHorizonView":
+        """Corrupt ``view``'s predicted rates (deterministic per seed).
+        Disconnected pairs (ρ = 0) stay disconnected — noise degrades rate
+        estimates, it does not invent links."""
+        if noise_std <= 0.0:
+            return cls(view.rates, view.alive, noise_std=0.0)
+        rng = np.random.default_rng(seed)
+        noise = np.exp(rng.normal(-0.5 * noise_std ** 2, noise_std,
+                                  view.rates.shape))
+        return cls(view.rates * noise, view.alive, noise_std=noise_std)
+
+
+# ---------------------------------------------------------------------------
 # Plan — a Solution with provenance
 # ---------------------------------------------------------------------------
 

@@ -1,0 +1,24 @@
+"""Plan-faithful distributed execution (`repro.exec`) — DESIGN.md §5.
+
+The optimizer stack (``core/``) *prices* a placement analytically; this
+package *runs* it.  Any :class:`~repro.core.planner.Plan` compiles into a
+:class:`StageGraph` (contiguous layer ranges per node, shared stages deduped
+across requests for batching), the :class:`ExecutionEngine` executes each
+stage as a jitted ``apply_layers`` closure and records wall-clock per stage
+and per transfer, and :mod:`repro.exec.calibrate` closes the loop: measured
+stage timings update :class:`~repro.core.profiles.LayerProfile` compute
+vectors so every registered planner re-solves against realized numbers.
+"""
+
+from .calibrate import (CalibrationReport, calibrate_profile,
+                        calibrated_problem, measured_layer_seconds,
+                        reconcile)
+from .engine import ExecutionEngine, ExecutionReport, StageTiming, layer_fns_for
+from .stage_graph import StageGraph, StageTask, Transfer, compile_plan
+
+__all__ = [
+    "CalibrationReport", "ExecutionEngine", "ExecutionReport", "StageGraph",
+    "StageTask", "StageTiming", "Transfer", "calibrate_profile",
+    "calibrated_problem", "compile_plan", "layer_fns_for",
+    "measured_layer_seconds", "reconcile",
+]

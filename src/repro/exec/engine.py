@@ -1,0 +1,241 @@
+"""StageGraph executor: jitted layer-range closures with per-stage and
+per-transfer wall-clock accounting.
+
+The engine runs a compiled :class:`~repro.exec.stage_graph.StageGraph` tick
+by tick in topological order:
+
+* each :class:`StageTask` executes as ONE jitted ``apply_layers`` closure —
+  requests sharing the stage are stacked into a batch, so a hotspot plan
+  compiles a handful of closures no matter how many requests ride them.
+  Closures are cached per ``(layer_start, layer_end)`` range; model layers
+  that route through :mod:`repro.kernels` pick up Pallas kernels on TPU and
+  the jnp reference paths elsewhere.  With a ``mesh``, divisible batches are
+  sharded across its devices (the CPU-device-count mesh CI forces via
+  ``--xla_force_host_platform_device_count``);
+* each boundary :class:`Transfer` is charged its analytic link delay
+  (``Problem.transfer_cost()`` — the exact coefficient OULD minimized) and
+  additionally gets the *measured* host serialization wall of materializing
+  the activation, reported separately so the reconciliation can split
+  link-model error from host overhead.
+
+``executed latency`` of a request = measured stage walls along its path +
+modeled link delays — the realized counterpart of
+``Evaluation.per_request_s`` (LLHR-style: judge placements on realized, not
+modeled, stage times).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Callable, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..core.profiles import ModelProfile
+from ..models import cnn
+from .stage_graph import StageGraph, StageTask
+
+
+@dataclasses.dataclass(frozen=True)
+class StageTiming:
+    """Measured execution of one batched stage launch."""
+
+    node: int
+    layer_start: int
+    layer_end: int
+    batch: int            # requests stacked into the launch
+    wall_s: float         # measured kernel wall (post-compile, blocked)
+
+
+@dataclasses.dataclass(frozen=True)
+class TransferRecord:
+    """One executed boundary shipment: modeled link delay + measured host
+    serialization wall (device sync + copy of the activation buffer)."""
+
+    request: int
+    src_node: int
+    dst_node: int
+    layer: int
+    nbytes: float
+    delay_s: float        # modeled: nbytes × spb[src, dst]
+    serialize_s: float    # measured: activation materialization wall
+
+
+@dataclasses.dataclass(frozen=True)
+class ExecutionReport:
+    """What actually ran: outputs plus the measured/modeled decomposition."""
+
+    outputs: dict[int, np.ndarray]          # request row → final activation
+    stage_timings: tuple[StageTiming, ...]
+    transfers: tuple[TransferRecord, ...]
+    executed_s: np.ndarray                  # (R,) measured comp + modeled comm
+    compute_s: np.ndarray                   # (R,) measured stage walls only
+    comm_s: np.ndarray                      # (R,) modeled link delays only
+    predicted_s: np.ndarray | None = None   # (R,) analytic, when supplied
+
+    def stage_wall(self, layer_start: int, layer_end: int) -> float:
+        """Min measured wall over launches of this layer range."""
+        walls = [t.wall_s for t in self.stage_timings
+                 if (t.layer_start, t.layer_end) == (layer_start, layer_end)]
+        if not walls:
+            raise KeyError(f"no launch executed layers "
+                           f"[{layer_start}, {layer_end})")
+        return min(walls)
+
+    @property
+    def abs_error_s(self) -> np.ndarray:
+        """|predicted − executed| per admitted request (requires predicted)."""
+        assert self.predicted_s is not None, "report carries no prediction"
+        mask = np.isfinite(self.executed_s) & np.isfinite(self.predicted_s)
+        return np.abs(np.where(mask, self.predicted_s - self.executed_s, 0.0))
+
+
+def layer_fns_for(profile: ModelProfile, params=None,
+                  key=None) -> list[Callable]:
+    """Per-unit apply functions matching ``profile``'s placement units.
+
+    Supports the paper's CNN workloads (``lenet`` / ``vgg16``); other
+    profiles must hand the engine their own ``layer_fns``.  ``params`` wins
+    over ``key`` (fresh init).
+    """
+    key = key if key is not None else jax.random.PRNGKey(0)
+    if profile.name == "lenet":
+        params = params if params is not None else cnn.lenet_init(key)
+        fns = cnn.lenet_layers(params)
+    elif profile.name == "vgg16":
+        params = params if params is not None else cnn.vgg16_init(key)
+        fns = cnn.vgg16_layers(params)
+    else:
+        raise ValueError(
+            f"no builtin layer fns for profile {profile.name!r}; "
+            "pass layer_fns to ExecutionEngine directly")
+    assert len(fns) == profile.num_layers
+    return fns
+
+
+class ExecutionEngine:
+    """Executes stage graphs over one model's ``layer_fns``.
+
+    One engine instance owns the jit cache, so repeated runs (the swarm
+    simulator's per-epoch sampling, calibration re-measures) pay compilation
+    once per unique layer range.
+    """
+
+    def __init__(self, layer_fns: Sequence[Callable], *, mesh=None,
+                 data_axis: str = "data"):
+        self.layer_fns = list(layer_fns)
+        self.mesh = mesh
+        self.data_axis = data_axis
+        self._closures: dict[tuple[int, int], Callable] = {}
+        self._warm: set[tuple[int, int, tuple]] = set()
+
+    # -- jit cache -----------------------------------------------------------
+    def closure(self, layer_start: int, layer_end: int) -> Callable:
+        rng = (layer_start, layer_end)
+        if rng not in self._closures:
+            fns = self.layer_fns
+
+            @jax.jit
+            def _run(x, _s=layer_start, _e=layer_end):
+                return cnn.apply_layers(fns, x, _s, _e)
+
+            self._closures[rng] = _run
+        return self._closures[rng]
+
+    def _device_put(self, x: jax.Array) -> jax.Array:
+        """Shard the batch dim over the mesh when it divides evenly."""
+        if self.mesh is None:
+            return x
+        n = self.mesh.shape.get(self.data_axis, 1)
+        if n <= 1 or x.shape[0] % n != 0:
+            return x
+        from jax.sharding import NamedSharding, PartitionSpec as P
+        spec = P(self.data_axis, *([None] * (x.ndim - 1)))
+        return jax.device_put(x, NamedSharding(self.mesh, spec))
+
+    def measure_range(self, layer_start: int, layer_end: int, x, *,
+                      repeats: int = 1) -> float:
+        """Measured wall of layers [layer_start, layer_end) on ``x`` (min of
+        ``repeats``, compile excluded) — the swarm simulator's executed-
+        latency sample for a stage."""
+        fn = self.closure(layer_start, layer_end)
+        x = self._device_put(jnp.asarray(x))
+        warm_key = (layer_start, layer_end, tuple(x.shape))
+        if warm_key not in self._warm:
+            jax.block_until_ready(fn(x))
+            self._warm.add(warm_key)
+        best = float("inf")
+        for _ in range(max(1, repeats)):
+            t0 = time.perf_counter()
+            jax.block_until_ready(fn(x))
+            best = min(best, time.perf_counter() - t0)
+        return best
+
+    def _launch(self, task: StageTask, x: jax.Array) -> tuple[jax.Array, float]:
+        """Run one batched stage; returns (output, measured wall seconds)."""
+        fn = self.closure(task.layer_start, task.layer_end)
+        x = self._device_put(x)
+        warm_key = (task.layer_start, task.layer_end, tuple(x.shape))
+        if warm_key not in self._warm:        # compile outside the clock
+            jax.block_until_ready(fn(x))
+            self._warm.add(warm_key)
+        t0 = time.perf_counter()
+        y = jax.block_until_ready(fn(x))
+        return y, time.perf_counter() - t0
+
+    # -- execution -----------------------------------------------------------
+    def run(self, graph: StageGraph, frames: np.ndarray, *,
+            predicted_s: np.ndarray | None = None) -> ExecutionReport:
+        """Execute ``graph`` on ``frames`` (one leading row per plan request;
+        rejected rows are never read).  Returns the full measured report."""
+        acts: dict[int, jax.Array] = {
+            r: jnp.asarray(frames[r][None]) for r in graph.requests}
+        timings: list[StageTiming] = []
+        compute_s = np.zeros(graph.n_requests)
+
+        transfer_by_consumer = {(tr.request, tr.layer): tr
+                                for tr in graph.transfers}
+        records: list[TransferRecord] = []
+
+        for task in graph.tasks:
+            # Boundary shipments INTO this stage: measure the host
+            # serialization of each inbound activation (the real, observable
+            # part of a U2U transfer on this substrate).
+            for r in task.requests:
+                tr = transfer_by_consumer.get((r, task.layer_start))
+                if tr is None:
+                    continue
+                t0 = time.perf_counter()
+                np.asarray(jax.block_until_ready(acts[r]))
+                records.append(TransferRecord(
+                    tr.request, tr.src_node, tr.dst_node, tr.layer,
+                    tr.nbytes, tr.delay_s, time.perf_counter() - t0))
+            x = (acts[task.requests[0]] if len(task.requests) == 1
+                 else jnp.concatenate([acts[r] for r in task.requests]))
+            y, wall = self._launch(task, x)
+            timings.append(StageTiming(task.node, task.layer_start,
+                                       task.layer_end, len(task.requests),
+                                       wall))
+            for b, r in enumerate(task.requests):
+                acts[r] = y[b][None]
+                compute_s[r] += wall
+
+        comm_s = np.zeros(graph.n_requests)
+        for tr in graph.transfers:
+            comm_s[tr.request] += tr.delay_s
+        executed = np.full(graph.n_requests, np.inf)
+        for r in graph.requests:
+            executed[r] = compute_s[r] + comm_s[r]
+        outputs = {r: np.asarray(acts[r][0]) for r in graph.requests}
+        return ExecutionReport(outputs, tuple(timings), tuple(records),
+                               executed, compute_s, comm_s, predicted_s)
+
+    def sequential_reference(self, frames: np.ndarray,
+                             requests: Sequence[int]) -> dict[int, np.ndarray]:
+        """Ground truth: every admitted request through all layers, one node."""
+        fn = self.closure(0, len(self.layer_fns))
+        return {r: np.asarray(fn(jnp.asarray(frames[r][None]))[0])
+                for r in requests}

@@ -24,6 +24,10 @@ def main() -> None:
     ap.add_argument("--sparse-k", type=int, default=None,
                     help="candidate budget for the *-sparse planners "
                          "(default: ceil(sqrt(pool nodes)))")
+    ap.add_argument("--execute", action="store_true",
+                    help="run a placed CNN inference through the repro.exec "
+                         "engine and report predicted vs measured latency "
+                         "(plus a calibrated re-solve)")
     args = ap.parse_args()
 
     import jax
@@ -66,6 +70,43 @@ def main() -> None:
           f"comm={ev.comm_latency_s * 1e6:.1f}us "
           f"stages(req0)={len(plan.stages(0)) if plan.admitted[0] else 0}"
           + sparse)
+
+    if args.execute:
+        # Plan-faithful execution: place the paper's CNN over the same pool
+        # with the same planner, run it through the exec engine, then re-solve
+        # on the measured-calibrated profile (DESIGN.md §5).
+        from repro.core import (Problem, SnapshotView, get_planner,
+                                lenet_profile)
+        from repro.exec import (ExecutionEngine, calibrated_problem,
+                                compile_plan, layer_fns_for)
+
+        profile = lenet_profile()
+        rng = np.random.default_rng(0)
+        sources = (np.arange(args.batch) % n).astype(np.int64)
+        prob = Problem(profile, np.full(n, 256e6), np.full(n, 95e9),
+                       rates_bits, sources, compute_speed=np.full(n, 9.5e9))
+        cnn_plan = get_planner(args.planner, sparse_k=args.sparse_k).plan(
+            prob, SnapshotView(rates_bits))
+        graph = compile_plan(cnn_plan)
+        engine = ExecutionEngine(layer_fns_for(profile))
+        frames = rng.standard_normal(
+            (args.batch, 326, 595, 3)).astype(np.float32)
+        report = engine.run(graph, frames,
+                            predicted_s=cnn_plan.evaluate().per_request_s)
+        cal_prob, recon = calibrated_problem(prob, report)
+        replan = get_planner(args.planner, sparse_k=args.sparse_k).plan(
+            cal_prob, SnapshotView(rates_bits))
+        regraph = compile_plan(replan)
+        rereport = engine.run(regraph, frames,
+                              predicted_s=replan.evaluate().per_request_s)
+        mae0 = report.abs_error_s[list(report.outputs)].mean()
+        mae1 = rereport.abs_error_s[list(rereport.outputs)].mean()
+        print(f"[exec] tasks={len(graph.tasks)} shared={graph.n_shared} "
+              f"transfers={len(graph.transfers)} "
+              f"executed_avg={report.executed_s[list(report.outputs)].mean():.4f}s")
+        print(f"[exec] {recon.summary()}")
+        print(f"[exec] predicted-vs-measured MAE {mae0 * 1e3:.2f}ms -> "
+              f"{mae1 * 1e3:.2f}ms after calibrated re-solve")
 
 
 if __name__ == "__main__":

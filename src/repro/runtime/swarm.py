@@ -55,7 +55,9 @@ from ..core.events import EventKind, EventQueue, churn_events, poisson_process
 from ..core.latency import evaluate
 from ..core.mobility import MultiGroupMobility, RPGParams
 from ..core.ould import Problem
-from ..core.planner import SnapshotView, available_planners, make_view
+from ..core.placement import to_stages
+from ..core.planner import (HorizonView, NoisyHorizonView, SnapshotView,
+                            StaleView, available_planners, make_view)
 from ..core.profiles import ModelProfile, lenet_profile
 from ..core.radio import RadioParams, rate_matrix
 from .serve import AdmissionController
@@ -97,6 +99,18 @@ class SwarmScenario:
     rel_change: float = 0.05       # incremental-solver link-drift threshold
     max_path_cost_s: float = 1e6   # admission bar: reject _BIG-priced paths
     sparse_k: int | None = None    # k-candidate budget for *-sparse planners
+    # Degraded-view axis (ROADMAP): what the planner sees vs what serves.
+    # None ⇒ the planner's preferred fresh view; "stale:<ticks>" ⇒ snapshot /
+    # horizon captured that many ticks ago (StaleView); "noisy:<std>" ⇒
+    # horizon rates with lognormal prediction error (NoisyHorizonView;
+    # snapshot planners are unaffected — a snapshot is measured, not
+    # predicted, so its degradation axis is staleness).
+    view_degradation: str | None = None
+    # Executed-latency sampling (repro.exec): serve latencies use measured
+    # stage wall-clock (jitted apply_layers on this host) instead of the
+    # analytic c_j/speed term; link delays stay priced per realized tick.
+    execute: bool = False
+    frame_hw: tuple[int, int, int] = (326, 595, 3)
     radio: RadioParams = RadioParams()
 
     def mobility(self, seed: int) -> MultiGroupMobility:
@@ -197,6 +211,64 @@ def _serve_once(path: np.ndarray, src: int, spb_t: np.ndarray,
     return float(lat)
 
 
+def _serve_once_executed(path: np.ndarray, src: int, spb_t: np.ndarray,
+                         alive: np.ndarray, K: list[float], Ks: float,
+                         measure) -> float:
+    """Executed-latency variant: per-stage *measured* wall-clock (``measure
+    (layer_start, layer_end) → s``, repro.exec engine) replaces the analytic
+    compute term; link delays stay priced per realized tick (Eq. 1)."""
+    if not alive[src] or not alive[path].all():
+        return float("inf")
+    stages = to_stages(path)
+    lat = (0.0 if stages[0].node == src
+           else Ks * spb_t[src, stages[0].node])
+    prev = stages[0].node
+    for st in stages:
+        if st.node != prev:
+            lat += K[st.layer_start - 1] * spb_t[prev, st.node]
+        lat += measure(st.layer_start, st.layer_end)
+        prev = st.node
+    return float(lat)
+
+
+def _parse_degradation(spec: str | None) -> tuple[str, float] | None:
+    """``"stale:3"`` / ``"noisy:0.25"`` → (mode, value)."""
+    if spec is None:
+        return None
+    mode, _, val = spec.partition(":")
+    if mode not in ("stale", "noisy"):
+        raise ValueError(f"unknown view degradation {spec!r}; "
+                         "use 'stale:<ticks>' or 'noisy:<std>'")
+    return mode, float(val or 0.0)
+
+
+def _stage_measurer(scn: SwarmScenario, profile: ModelProfile, seed: int):
+    """Measured-seconds lookup for stage ranges: one ExecutionEngine per
+    simulation, one jit + one measurement per unique (start, end) range —
+    hotspot plans collapse to a handful of kernel timings."""
+    from ..exec import ExecutionEngine, layer_fns_for  # lazy: pulls in jax
+
+    engine = ExecutionEngine(layer_fns_for(profile))
+    rng = np.random.default_rng(seed)
+    frame = rng.standard_normal((1, *scn.frame_hw)).astype(np.float32)
+    acts: dict[int, object] = {0: frame}   # boundary activations, lazily
+    cache: dict[tuple[int, int], float] = {}
+
+    def act_at(layer: int):
+        if layer not in acts:
+            acts[layer] = engine.closure(layer - 1, layer)(act_at(layer - 1))
+        return acts[layer]
+
+    def measure(layer_start: int, layer_end: int) -> float:
+        key = (layer_start, layer_end)
+        if key not in cache:
+            cache[key] = engine.measure_range(layer_start, layer_end,
+                                              act_at(layer_start))
+        return cache[key]
+
+    return measure
+
+
 def simulate(scn: SwarmScenario, policy: str, seed: int = 0, *,
              profile: ModelProfile | None = None,
              cold_resolves: bool = False) -> SimResult:
@@ -259,10 +331,31 @@ def simulate(scn: SwarmScenario, policy: str, seed: int = 0, *,
                                sparse_k=scn.sparse_k)
     wants_horizon = getattr(ctrl.planner, "preferred_view",
                             "snapshot") == "horizon"
+    degradation = _parse_degradation(scn.view_degradation)
+    measure = (_stage_measurer(scn, profile, seed) if scn.execute else None)
 
     epochs: list[EpochLog] = []
     latencies: list[float] = []
     served = missed = 0
+
+    def build_view(tick: int):
+        """The planner's view of the network at this epoch — fresh by
+        default, degraded when the scenario asks (serving always happens on
+        the realized per-tick rates, so the gap is measured, not assumed)."""
+        stale = 0
+        if degradation is not None and degradation[0] == "stale":
+            stale = int(degradation[1])
+        seen = max(0, tick - stale)
+        if wants_horizon:     # the epoch's predicted rates (Eq. 14 horizon)
+            end = min(seen + scn.epoch_ticks, T)
+            view = HorizonView(np.stack(rates_t[seen:end]), alive.copy())
+            if degradation is not None and degradation[0] == "noisy":
+                view = NoisyHorizonView.corrupt(
+                    view, degradation[1], seed=seed * 100003 + tick)
+            return view
+        if stale:
+            return StaleView(rates_t[seen], alive.copy(), age_ticks=stale)
+        return make_view(rates_t[tick], alive.copy())
 
     def replace_all(tick: int) -> None:
         nonlocal placed
@@ -273,14 +366,9 @@ def simulate(scn: SwarmScenario, policy: str, seed: int = 0, *,
             return
         sources = np.array([s.source for s in act], np.int64)
         ids = [s.id for s in act]
-        if wants_horizon:     # the epoch's predicted rates (Eq. 14 horizon)
-            end = min(tick + scn.epoch_ticks, T)
-            rates = np.stack(rates_t[tick:end])
-        else:                 # the fresh snapshot
-            rates = rates_t[tick]
-        view = make_view(rates, alive.copy())
-        plan = ctrl.admit(Problem(profile, mem_cap, comp_cap, rates, sources,
-                                  speed), view, request_ids=ids)
+        view = build_view(tick)
+        plan = ctrl.admit(Problem(profile, mem_cap, comp_cap, view.rates,
+                                  sources, speed), view, request_ids=ids)
         stats = plan.solve_stats
         n_kept = stats.n_kept if stats is not None else 0
         n_rep = stats.n_replaced if stats is not None else len(act)
@@ -317,8 +405,12 @@ def simulate(scn: SwarmScenario, policy: str, seed: int = 0, *,
                 s = streams[sid]
                 if not (s.arrive_tick <= t < s.depart_tick):
                     continue
-                lat = _serve_once(path, s.source, spb_t, alive, K, Ks,
-                                  comp, speed)
+                if measure is not None:
+                    lat = _serve_once_executed(path, s.source, spb_t, alive,
+                                               K, Ks, measure)
+                else:
+                    lat = _serve_once(path, s.source, spb_t, alive, K, Ks,
+                                      comp, speed)
                 served += 1
                 if lat > scn.deadline_s:
                     missed += 1

@@ -1,0 +1,221 @@
+"""Plan-faithful execution engine (repro.exec): numeric equivalence to the
+sequential reference across uniform and non-uniform cuts, stage dedup,
+transfer pricing consistency, and measured-latency calibration."""
+
+import dataclasses
+
+import jax
+import numpy as np
+import pytest
+
+from repro.core import (Problem, SnapshotView, Solution, get_planner,
+                        lenet_profile, vgg16_profile)
+from repro.core.mobility import RPGMobility, RPGParams
+from repro.core.planner import Plan
+from repro.core.radio import RadioParams, rate_matrix
+from repro.exec import (ExecutionEngine, calibrated_problem, compile_plan,
+                        layer_fns_for)
+from repro.exec.stage_graph import stage_signature
+
+MB = 1e6
+TOL = 1e-5
+
+# Non-uniform 2/3/4-stage cuts per model (stage layer counts, each sums to M).
+CUTS = {
+    "lenet": ([3, 4], [1, 4, 2], [2, 2, 1, 2]),        # M = 7 units
+    "vgg16": ([5, 13], [2, 9, 7], [1, 6, 4, 7]),       # M = 18 units
+}
+
+
+def _uniform_problem(profile, n_nodes=6, requests=2, seed=0):
+    mob = RPGMobility(RPGParams(n_uavs=n_nodes, area_m=120.0,
+                                homogeneous=False), seed=seed)
+    rates = rate_matrix(mob.positions(1, seed=seed)[0], RadioParams())
+    sources = np.zeros(requests, np.int64)
+    return Problem(profile, np.full(n_nodes, 4096 * MB),
+                   np.full(n_nodes, 1e18), rates, sources,
+                   compute_speed=np.full(n_nodes, 9.5e9))
+
+
+def _manual_plan(prob, sizes_per_request):
+    """A hand-built plan: request r runs stage s's layers on node s (so every
+    cut point crosses a link)."""
+    M = prob.n_layers
+    R = len(sizes_per_request)
+    assign = np.zeros((R, M), np.int64)
+    for r, sizes in enumerate(sizes_per_request):
+        assert sum(sizes) == M
+        j = 0
+        for node, size in enumerate(sizes):
+            assign[r, j:j + size] = node
+            j += size
+    sol = Solution(assign, 0.0, "feasible", 0.0, np.ones(R, bool),
+                   solver="manual")
+    return Plan(sol, "manual", "snapshot", prob)
+
+
+def _frames(rng, n, hw):
+    return rng.standard_normal((n, *hw)).astype(np.float32)
+
+
+@pytest.mark.parametrize("model,hw", [("lenet", (326, 595, 3)),
+                                      ("vgg16", (48, 64, 3))])
+def test_engine_matches_sequential_across_cuts(model, hw):
+    """Executed output == sequential apply_layers for 2/3/4-stage
+    non-uniform cuts (the satellite acceptance matrix)."""
+    profile = (lenet_profile() if model == "lenet" else vgg16_profile())
+    prob = _uniform_problem(profile)
+    fns = layer_fns_for(profile, key=jax.random.PRNGKey(1))
+    engine = ExecutionEngine(fns)
+    rng = np.random.default_rng(0)
+    for sizes in CUTS[model]:
+        plan = _manual_plan(prob, [sizes, sizes])
+        graph = compile_plan(plan)
+        assert len(graph.tasks) == len(sizes)          # both requests batch
+        assert graph.n_shared == len(sizes)            # dedup across requests
+        frames = _frames(rng, 2, hw)
+        report = engine.run(graph, frames)
+        ref = engine.sequential_reference(frames, graph.requests)
+        for r in graph.requests:
+            err = np.abs(report.outputs[r] - ref[r]).max()
+            assert err < TOL, (model, sizes, r, err)
+        # every cut point shipped one boundary activation per request
+        assert len(graph.transfers) == 2 * (len(sizes) - 1)
+
+
+def test_engine_mixed_cuts_one_graph():
+    """Requests with DIFFERENT cuts in one graph stay independent and
+    correct (no cross-request batching of unequal stages)."""
+    profile = lenet_profile()
+    prob = _uniform_problem(profile, requests=3)
+    fns = layer_fns_for(profile, key=jax.random.PRNGKey(2))
+    engine = ExecutionEngine(fns)
+    rng = np.random.default_rng(1)
+    plan = _manual_plan(prob, [[3, 4], [1, 4, 2], [7]])
+    graph = compile_plan(plan)
+    frames = _frames(rng, 3, (326, 595, 3))
+    report = engine.run(graph, frames)
+    ref = engine.sequential_reference(frames, graph.requests)
+    for r in graph.requests:
+        assert np.abs(report.outputs[r] - ref[r]).max() < TOL
+    sig = stage_signature(graph)
+    assert (0, 7) in sig and (0, 3) in sig and (0, 1) in sig
+
+
+def test_planner_plans_execute_equivalently():
+    """The acceptance matrix: every plan a registered planner emits on a
+    fixed-seed scenario executes numerically equivalent to sequential."""
+    profile = lenet_profile()
+    mob = RPGMobility(RPGParams(n_uavs=8, area_m=150.0, homogeneous=False),
+                      seed=0)
+    rates = rate_matrix(mob.positions(1)[0], RadioParams())
+    rng = np.random.default_rng(0)
+    sources = rng.integers(0, 3, 5).astype(np.int64)
+    prob = Problem(profile, np.full(8, 128 * MB), np.full(8, 95e9), rates,
+                   sources, compute_speed=np.full(8, 9.5e9))
+    fns = layer_fns_for(profile, key=jax.random.PRNGKey(0))
+    engine = ExecutionEngine(fns)
+    frames = _frames(rng, 5, (326, 595, 3))
+    for name in ("ould-dp", "ould-dp-sparse", "nearest", "hrm"):
+        plan = get_planner(name).plan(prob, SnapshotView(rates))
+        assert plan.n_admitted > 0, name
+        graph = compile_plan(plan)
+        report = engine.run(graph, frames)
+        ref = engine.sequential_reference(frames, graph.requests)
+        for r in graph.requests:
+            err = np.abs(report.outputs[r] - ref[r]).max()
+            assert err < TOL, (name, r, err)
+
+
+def test_transfer_delays_match_paper_objective():
+    """Graph transfer pricing sums to the evaluation's comm latency — the
+    executed decomposition uses the exact coefficients OULD minimized."""
+    profile = lenet_profile()
+    prob = _uniform_problem(profile, requests=2)
+    plan = _manual_plan(prob, [[3, 4], [2, 2, 1, 2]])
+    graph = compile_plan(plan)
+    ev = plan.evaluate()
+    total = sum(tr.delay_s for tr in graph.transfers)
+    assert total == pytest.approx(ev.comm_latency_s, rel=1e-9)
+    for r in graph.requests:
+        assert graph.transfer_delay_s(r) >= 0.0
+
+
+def test_topological_task_order():
+    """Every transfer's producer stage precedes its consumer stage."""
+    profile = lenet_profile()
+    prob = _uniform_problem(profile, requests=2)
+    plan = _manual_plan(prob, [[1, 4, 2], [3, 4]])
+    graph = compile_plan(plan)
+    pos = {t.key: i for i, t in enumerate(graph.tasks)}
+    for tr in graph.transfers:
+        producer = max(i for k, i in pos.items()
+                       if k[0] == tr.src_node and k[2] == tr.layer)
+        consumer = min(i for k, i in pos.items()
+                       if k[0] == tr.dst_node and k[1] == tr.layer)
+        assert producer < consumer
+
+
+def test_calibration_reduces_resolve_mae():
+    """The acceptance gate: calibrated profiles cut the predicted-vs-
+    measured MAE on a re-solve (analytic FLOP-model error ≫ timing noise)."""
+    profile = lenet_profile()
+    mob = RPGMobility(RPGParams(n_uavs=8, area_m=150.0, homogeneous=False),
+                      seed=0)
+    rates = rate_matrix(mob.positions(1)[0], RadioParams())
+    rng = np.random.default_rng(0)
+    sources = rng.integers(0, 3, 4).astype(np.int64)
+    prob = Problem(profile, np.full(8, 128 * MB), np.full(8, 95e9), rates,
+                   sources, compute_speed=np.full(8, 9.5e9))
+    engine = ExecutionEngine(layer_fns_for(profile, key=jax.random.PRNGKey(0)))
+    frames = _frames(rng, 4, (326, 595, 3))
+    planner = get_planner("ould-dp")
+
+    plan = planner.plan(prob, SnapshotView(rates))
+    graph = compile_plan(plan)
+    report = engine.run(graph, frames,
+                        predicted_s=np.asarray(plan.evaluate().per_request_s))
+    mae_before = report.abs_error_s[list(report.outputs)].mean()
+
+    cal_prob, recon = calibrated_problem(prob, report)
+    assert recon.layer_covered.any()
+    assert recon.profile.num_layers == profile.num_layers
+    # memory/output vectors untouched — calibration only updates compute
+    assert recon.profile.memory_vector() == profile.memory_vector()
+    assert recon.profile.output_vector() == profile.output_vector()
+
+    replan = planner.plan(cal_prob, SnapshotView(rates))
+    regraph = compile_plan(replan)
+    rereport = engine.run(
+        regraph, frames,
+        predicted_s=np.asarray(replan.evaluate().per_request_s))
+    mae_after = rereport.abs_error_s[list(rereport.outputs)].mean()
+    assert mae_after < mae_before, (mae_before, mae_after)
+
+
+def test_rejected_requests_never_compiled():
+    profile = lenet_profile()
+    prob = _uniform_problem(profile, requests=2)
+    assign = np.zeros((2, profile.num_layers), np.int64)
+    assign[1] = -1
+    sol = Solution(assign, 0.0, "rejected:1", 0.0,
+                   np.array([True, False]), solver="manual")
+    plan = Plan(sol, "manual", "snapshot", prob)
+    graph = compile_plan(plan)
+    assert graph.requests == (0,)
+    assert all(1 not in t.requests for t in graph.tasks)
+
+
+def test_calibrated_problem_is_new_instance():
+    """Calibration never mutates the analytic profile in place."""
+    profile = lenet_profile()
+    prob = _uniform_problem(profile, requests=1)
+    engine = ExecutionEngine(layer_fns_for(profile, key=jax.random.PRNGKey(0)))
+    plan = _manual_plan(prob, [[3, 4]])
+    report = engine.run(compile_plan(plan),
+                        _frames(np.random.default_rng(0), 1, (326, 595, 3)))
+    before = list(profile.compute_vector())
+    cal_prob, _ = calibrated_problem(prob, report)
+    assert profile.compute_vector() == before
+    assert cal_prob.profile is not profile
+    assert dataclasses.is_dataclass(cal_prob.profile)

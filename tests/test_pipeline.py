@@ -1,4 +1,6 @@
-"""shard_map GPipe pipeline vs sequential reference (4-device subprocess)."""
+"""shard_map GPipe pipeline vs sequential reference (4-device subprocess):
+uniform cuts (historical contract) plus OULD-style non-uniform stage cuts
+with fill/drain bubble coverage (n_micro below/equal/above n_stages)."""
 
 import subprocess
 import sys
@@ -8,7 +10,7 @@ import os
 os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
 import jax, jax.numpy as jnp, numpy as np
 from jax.sharding import Mesh
-from repro.parallel.pipeline import pipeline_forward
+from repro.parallel.pipeline import pipeline_forward, pipeline_forward_stages
 
 mesh = Mesh(np.array(jax.devices()).reshape(4), ("stage",))
 L, B, D = 8, 8, 16
@@ -31,6 +33,35 @@ out2 = jax.jit(lambda w, x: pipeline_forward(block_fn, w, x, mesh=mesh,
                                              n_micro=8))(w, x)
 err2 = np.abs(np.asarray(out2) - np.asarray(ref)).max()
 assert err2 < 1e-5, err2
+
+# Non-uniform OULD-style cuts: padded per-stage slices + validity mask.
+# n_micro below / equal to / above n_stages so fill/drain bubbles (ticks
+# where a stage runs on garbage and the mask discards it) are exercised at
+# every occupancy; each pairing compiles once (CPU shard_map compiles are
+# expensive, so the matrix is a diagonal, not a product).
+for sizes, n_micro in (([1, 3, 2, 2], 2), ([4, 2, 1, 1], 4),
+                       ([1, 1, 1, 5], 8)):
+    out3 = jax.jit(lambda w, x, s=tuple(sizes), m=n_micro:
+                   pipeline_forward_stages(block_fn, w, x, mesh=mesh,
+                                           stage_sizes=s, n_micro=m))(w, x)
+    err3 = np.abs(np.asarray(out3) - np.asarray(ref)).max()
+    assert err3 < 1e-5, (sizes, n_micro, err3)
+
+# Degenerate but legal: one stage hosts a single layer, batch of one
+# microbatch (pure fill/drain, no steady state).
+out4 = jax.jit(lambda w, x: pipeline_forward_stages(
+    block_fn, w, x, mesh=mesh, stage_sizes=[1, 5, 1, 1], n_micro=1))(w, x)
+err4 = np.abs(np.asarray(out4) - np.asarray(ref)).max()
+assert err4 < 1e-5, err4
+
+# Bad cuts must be rejected, not silently truncated.
+for bad in ([2, 2, 2], [3, 3, 1, 0], [4, 4, 4, 4]):
+    try:
+        pipeline_forward_stages(block_fn, w, x, mesh=mesh, stage_sizes=bad)
+    except ValueError:
+        pass
+    else:
+        raise AssertionError(f"stage_sizes {bad} accepted")
 print("OK")
 """
 
