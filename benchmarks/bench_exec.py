@@ -24,7 +24,12 @@ Claims:
       predicted-vs-measured latency error on a re-solve — the ``improved``
       boolean is the lock (the analytic FLOP model is off by a large
       systematic factor, so the reduction survives timing noise); the
-      magnitudes are ungated ``_info``.
+      magnitudes are ungated ``_info``;
+  E5  cross-arrival stage batching (``coalesce_graphs``): requests that
+      arrive in different admission rounds but share a stage coalesce into
+      one launch — the launch-count reduction is exact, the coalesced
+      outputs match the per-round executions within TOL (the queueing
+      runtime's batching contract), walls are ungated ``_info``.
 
 Metric naming follows check_regression's classes: measured walls and error
 magnitudes end in ``_info`` (present, never value-gated); counts, stage
@@ -44,8 +49,8 @@ from repro.core import (Problem, SnapshotView, Solution, get_planner,
                         lenet_profile)
 from repro.core.planner import Plan
 from repro.core.radio import RadioParams, rate_matrix
-from repro.exec import (ExecutionEngine, calibrated_problem, compile_plan,
-                        layer_fns_for)
+from repro.exec import (ExecutionEngine, calibrated_problem, coalesce_graphs,
+                        compile_plan, layer_fns_for)
 from repro.parallel.pipeline import pipeline_forward_stages
 
 from .common import MB, Csv, make_network
@@ -166,6 +171,50 @@ def _bench_dedup(csv: Csv, engine: ExecutionEngine, quick: bool) -> dict:
             "dedup_ratio_info": speedup}
 
 
+def _bench_coalesce(csv: Csv, engine: ExecutionEngine, quick: bool) -> dict:
+    """E5: batch launches across arrival rounds.  Three admission rounds of
+    the same hotspot cut (what a steady overload stream produces) execute as
+    one graph; per-request outputs must match the per-round executions."""
+    rounds_n, requests = 3, 4
+    reps = 2 if quick else 3
+    prob = _snapshot(6, requests, mem_mb=4096, seed=0, same_source=True)
+    plan = _manual_plan(prob, [3, 4])
+    graphs = [compile_plan(plan) for _ in range(rounds_n)]
+    merged = coalesce_graphs(graphs)
+    frames = np.random.default_rng(3).standard_normal(
+        (rounds_n * requests, *FRAME_HW)).astype(np.float32)
+
+    launches_rounds = sum(len(g.tasks) for g in graphs)
+    launches_merged = len(merged.tasks)
+
+    merged_report = engine.run(merged, frames)
+    worst = 0.0
+    for i, g in enumerate(graphs):
+        solo = engine.run(g, frames[i * requests:(i + 1) * requests])
+        for r in g.requests:
+            worst = max(worst, float(np.abs(
+                merged_report.outputs[r + i * requests]
+                - solo.outputs[r]).max()))
+    equivalent = bool(worst < TOL)
+    t_merged = min(_timed(lambda: engine.run(merged, frames))
+                   for _ in range(reps))
+    t_rounds = min(_timed(lambda: [
+        engine.run(g, frames[i * requests:(i + 1) * requests])
+        for i, g in enumerate(graphs)]) for _ in range(reps))
+    reduction = launches_rounds / max(launches_merged, 1)
+    csv.add("exec/claims/E5_cross_arrival_batching", t_merged * 1e6,
+            f"rounds={rounds_n} R={requests} launches {launches_rounds}->"
+            f"{launches_merged} ({reduction:.1f}x) max_err={worst:.2e} "
+            f"rounds_wall={t_rounds * 1e6:.0f}us equivalent={equivalent}")
+    assert equivalent, f"E5: coalesced execution diverged: {worst}"
+    assert launches_merged < launches_rounds, "E5: no launch reduction"
+    return {"rounds": rounds_n, "requests_per_round": requests,
+            "launches_rounds": launches_rounds,
+            "launches_merged": launches_merged,
+            "launch_reduction": reduction, "equivalent": equivalent,
+            "merged_wall_info": t_merged, "rounds_wall_info": t_rounds}
+
+
 def _timed(fn) -> float:
     t0 = time.perf_counter()
     fn()
@@ -267,6 +316,7 @@ def run(csv: Csv, quick: bool = False) -> dict:
         "dedup": _bench_dedup(csv, engine, quick),
         "pipeline": _bench_pipeline(csv, quick),
         "calibration": _bench_calibration(csv, engine, quick),
+        "coalesce": _bench_coalesce(csv, engine, quick),
     }
 
 

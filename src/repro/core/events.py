@@ -33,6 +33,7 @@ class EventKind(enum.IntEnum):
     NODE_REJOIN = 3    # payload: node id — node restored
     MOBILITY_TICK = 4  # advance positions one step, re-sample rate matrix
     EPOCH = 5          # re-placement boundary (re-solve OULD/OULD-MP)
+    QUEUE_ADVANCE = 6  # drain the tick's emitted frames through node queues
 
 
 @dataclasses.dataclass(frozen=True, order=True)

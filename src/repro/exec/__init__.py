@@ -14,11 +14,12 @@ from .calibrate import (CalibrationReport, calibrate_profile,
                         calibrated_problem, measured_layer_seconds,
                         reconcile)
 from .engine import ExecutionEngine, ExecutionReport, StageTiming, layer_fns_for
-from .stage_graph import StageGraph, StageTask, Transfer, compile_plan
+from .stage_graph import (StageGraph, StageTask, Transfer, coalesce_graphs,
+                          compile_plan)
 
 __all__ = [
     "CalibrationReport", "ExecutionEngine", "ExecutionReport", "StageGraph",
     "StageTask", "StageTiming", "Transfer", "calibrate_profile",
-    "calibrated_problem", "compile_plan", "layer_fns_for",
+    "calibrated_problem", "coalesce_graphs", "compile_plan", "layer_fns_for",
     "measured_layer_seconds", "reconcile",
 ]

@@ -134,6 +134,56 @@ def compile_plan(plan: Plan, *, problem: Problem | None = None,
                       prob.n_requests, tuple(rows))
 
 
+def coalesce_graphs(graphs: list[StageGraph] | tuple[StageGraph, ...], *,
+                    offsets: list[int] | None = None) -> StageGraph:
+    """Batch stage launches *across arrival time*.
+
+    ``compile_plan`` dedups shared stages within ONE plan; a serving runtime
+    compiles one plan per admission round, so requests that arrive in
+    different rounds but run the same ``(node, layer_start, layer_end)``
+    stage still launch separately.  This merges several compiled graphs into
+    one: request rows are re-identified by per-graph ``offsets`` (default:
+    cumulative ``n_requests``, i.e. the graphs' plan rows stacked in order),
+    tasks with equal keys coalesce into one batched launch, and transfers
+    carry over with shifted request ids.  Executing the merged graph on the
+    stacked frame array is exactly equivalent per request — same layer
+    ranges, same link delays — but with fewer kernel launches (pinned by the
+    E5 bench and the equivalence test).
+
+    All graphs must share ``n_layers`` (one model).
+    """
+    if not graphs:
+        raise ValueError("coalesce_graphs needs at least one graph")
+    n_layers = graphs[0].n_layers
+    if any(g.n_layers != n_layers for g in graphs):
+        raise ValueError("cannot coalesce graphs of different models: "
+                         f"n_layers {[g.n_layers for g in graphs]}")
+    if offsets is None:
+        offsets = list(np.cumsum([0] + [g.n_requests for g in graphs])[:-1])
+    if len(offsets) != len(graphs):
+        raise ValueError(f"{len(offsets)} offsets for {len(graphs)} graphs")
+
+    by_key: dict[tuple[int, int, int], list[int]] = {}
+    transfers: list[Transfer] = []
+    rows: list[int] = []
+    for g, off in zip(graphs, offsets):
+        off = int(off)
+        for t in g.tasks:
+            by_key.setdefault(t.key, []).extend(r + off for r in t.requests)
+        transfers.extend(dataclasses.replace(tr, request=tr.request + off)
+                         for tr in g.transfers)
+        rows.extend(r + off for r in g.requests)
+
+    tasks = tuple(StageTask(n, s, e, tuple(sorted(rs)))
+                  for (n, s, e), rs in sorted(by_key.items(),
+                                              key=lambda kv: (kv[0][1],
+                                                              kv[0][0])))
+    n_requests = max(int(off) + g.n_requests
+                     for g, off in zip(graphs, offsets))
+    return StageGraph(tasks, tuple(transfers), n_layers, n_requests,
+                      tuple(rows))
+
+
 def stage_signature(graph: StageGraph) -> tuple[tuple[int, int], ...]:
     """The unique ``(layer_start, layer_end)`` ranges a graph executes —
     the jit-compilation footprint (one closure per range)."""

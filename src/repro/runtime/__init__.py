@@ -1,7 +1,7 @@
-from . import elastic, serve, steps, swarm, train_loop
+from . import elastic, queueing, serve, steps, swarm, train_loop
 from .steps import (TrainConfig, init_opt_state, make_decode_step,
                     make_prefill_step, make_train_step)
 
 __all__ = ["TrainConfig", "elastic", "init_opt_state", "make_decode_step",
-           "make_prefill_step", "make_train_step", "serve", "steps", "swarm",
-           "train_loop"]
+           "make_prefill_step", "make_train_step", "queueing", "serve",
+           "steps", "swarm", "train_loop"]

@@ -18,6 +18,7 @@ import numpy as np
 
 from ..configs.base import ModelConfig
 from ..core import Problem, ResolveStats
+from ..core.latency import evaluate
 from ..core.planner import Plan, Planner, TopologyView, get_planner, make_view
 from ..core.profiles import lm_profile
 from . import steps as steps_mod
@@ -81,22 +82,82 @@ class AdmissionController:
         # Per-round solve stats only — a Plan pins its bound Problem (rate
         # matrices), which must not accumulate over a long-running pool.
         self.history: list[ResolveStats] = []
+        # Streams the queue-depth bar turned away last round (queue-aware
+        # admission only; 0 otherwise).
+        self.last_queue_rejected: int = 0
 
     def admit(self, problem: Problem, view: TopologyView | np.ndarray,
-              request_ids=None) -> Plan:
+              request_ids=None, *, backlog_s: np.ndarray | None = None,
+              deadline_s: np.ndarray | float | None = None) -> Plan:
         """Place this round's active request set; returns the :class:`Plan`.
 
         ``view`` may be a prepared TopologyView or a raw rate array (wrapped
         via :func:`make_view`); ``request_ids`` are stable stream ids for
         placement inheritance across rounds (ignored by stateless planners).
+
+        When ``backlog_s`` (per-node expected queue wait, seconds) and
+        ``deadline_s`` (per-request, broadcastable) are both given, admission
+        prices queue depth into the bar: any planner-admitted request whose
+        path latency *plus* the backlog at its bottleneck node would overrun
+        its deadline is turned away (admitted→False, assign→-1) before the
+        plan is returned.  Path-cost-only admission can place a stream onto
+        a node whose queue already guarantees a deadline miss; this gate is
+        what "expected wait = queue backlog" buys.  Note the gate runs after
+        the solve, so warm planners still hold capacity for gated streams
+        until the next round — conservative, never over-admits.
         """
         if isinstance(view, np.ndarray):
             view = make_view(view)
         plan = self.planner.plan(problem, view, request_ids=request_ids)
+        self.last_queue_rejected = 0
+        if (backlog_s is not None and deadline_s is not None
+                and plan.n_admitted):
+            plan = self._queue_gate(plan, np.asarray(backlog_s, float),
+                                    deadline_s)
         self.history.append(plan.solve_stats or ResolveStats(
             0, plan.solution.n_admitted, problem.n_nodes, True,
             plan.solve_time_s))
         return plan
+
+    def _queue_gate(self, plan: Plan, backlog_s: np.ndarray,
+                    deadline_s: np.ndarray | float) -> Plan:
+        """Reject planner-admitted requests whose expected queue wait (the
+        backlog at their bottleneck node) pushes them past their deadline."""
+        admitted = plan.admitted.copy()
+        deadline = np.broadcast_to(np.asarray(deadline_s, float),
+                                   admitted.shape)
+        per_req = plan.evaluate().per_request_s
+        comp = np.asarray(plan.problem.profile.compute_vector(), float)
+        speed = plan.problem.compute_speed
+        assign = plan.assign.copy()
+        gated = 0
+        for r in np.flatnonzero(admitted):
+            path = assign[r]
+            # bottleneck node = host of the largest stage wall on the path
+            best_w, best_node, cur, w = -1.0, int(path[0]), int(path[0]), 0.0
+            for j in range(path.shape[0]):
+                node = int(path[j])
+                if node != cur:
+                    if w > best_w:
+                        best_w, best_node = w, cur
+                    cur, w = node, 0.0
+                w += comp[j] / (speed[node] if speed is not None else 1.0)
+            if w > best_w:
+                best_w, best_node = w, cur
+            if per_req[r] + backlog_s[best_node] > deadline[r]:
+                admitted[r] = False
+                assign[r] = -1
+                gated += 1
+        self.last_queue_rejected = gated
+        if not gated:
+            return plan
+        sol = dataclasses.replace(plan.solution, assign=assign,
+                                  admitted=admitted,
+                                  status=plan.solution.status
+                                  + f"+queue-gated:{gated}")
+        sol = dataclasses.replace(
+            sol, objective=evaluate(plan.problem, sol).comm_latency_s)
+        return dataclasses.replace(plan, solution=sol)
 
     @property
     def total_solve_time_s(self) -> float:

@@ -1,4 +1,5 @@
-"""Event-driven swarm serving simulator: streaming requests on a moving swarm.
+"""Event-driven swarm serving simulator: streaming requests on a moving
+swarm, served through per-node queues.
 
 The paper's static instances answer "where do the layers go *right now*";
 this simulator answers the question the paper actually motivates OULD-MP
@@ -6,6 +7,29 @@ with: how do placement policies behave when the network changes *under* the
 computation — UAVs move (link rates drift, inter-group links fade beyond
 range), nodes drop out and rejoin, and classification requests arrive as a
 Poisson stream instead of one batch.
+
+Since the queueing-runtime refactor the serve path is layered, not
+monolithic:
+
+* :func:`build_event_tape` freezes the scenario's entire stochastic input —
+  arrivals, holds, sources, deadline classes, churn — into an
+  :class:`EventTape` before any policy runs, so every policy consumes the
+  *identical* tape (same seed ⇒ paired per-request metrics) and the pairing
+  is testable as data, not as a convention;
+* the per-tick serve step is vectorized struct-of-arrays: one numpy pass
+  prices every active stream's realized path latency for the tick and emits
+  one *frame* per stream into its placed node's queue — a frame occupies
+  the node hosting its heaviest stage for that stage's modeled (or
+  measured, ``execute=True``) wall instead of completing instantly;
+* :class:`~repro.runtime.queueing.NodeQueues` advances those queues on the
+  tape's ``QUEUE_ADVANCE`` events (one per tick): waits accumulate under
+  overload, and the scenario's :class:`~repro.runtime.queueing.
+  ServicePolicy` (``service_policy="fifo" | "edf" | "fifo+drop" | ...``)
+  decides what a saturated node drops, degrades, or turns away;
+* admission runs per epoch through :class:`~repro.runtime.serve.
+  AdmissionController`; with ``queue_aware_admission=True`` the controller
+  prices each stream's expected queue wait (backlog at its placed node)
+  into the admission bar, not just path cost.
 
 Simulator knobs → paper sections
 --------------------------------
@@ -25,24 +49,20 @@ knob                      paper grounding
 ``hold_ticks_mean``       §III-A each request is a surveillance stream served
                           every time step until its source stops capturing
 ``mem_mb``/``gflops``     §IV node calibration: {256, 512} MB, 9.5 GFLOPS
-``deadline_s``            §I surveillance timeliness requirement (deadline
-                          misses are the cost of serving over a faded link)
+``deadline_s``            §I surveillance timeliness requirement (single
+                          class; ``deadline_classes`` splits the workload
+                          into tiers with distinct deadlines)
+``service_policy``        overload behavior of a saturated node (the
+                          ``fast_mot`` skip/degrade discipline)
 ``mtbf_s``/``mttr_s``     §III-C "UAVs may leave the swarm" — unpredicted
                           churn, invisible to both OULD and OULD-MP horizons
 ========================  ====================================================
 
 Policies are registered *planners* (see :mod:`repro.core.planner`): the
-simulator's epoch loop is strategy-agnostic — it builds the richest
+epoch loop is strategy-agnostic — it builds the richest
 :class:`~repro.core.planner.TopologyView` each planner prefers (a predicted
-horizon for ``ould-mp``, the fresh snapshot otherwise) and calls
-``plan()`` through one :class:`~repro.runtime.serve.AdmissionController`.
-``incremental`` is the warm-started snapshot OULD of PR 1;
-``incremental-sparse`` the same warm loop over the k-candidate pruned DP
-(the N ≥ 50 engine; ``SwarmScenario.sparse_k`` overrides its √N candidate
-budget); ``ould-mp`` the horizon objective; ``nearest``/``hrm``/
-``nearest-hrm`` the stateless §IV-A heuristics.  All policies consume the
-identical event tape (same seed ⇒ same arrivals, holds, churn,
-trajectories), so per-request metrics are paired.
+horizon for ``ould-mp``, the fresh snapshot otherwise) and calls ``plan()``
+through one :class:`~repro.runtime.serve.AdmissionController`.
 """
 
 from __future__ import annotations
@@ -51,7 +71,8 @@ import dataclasses
 
 import numpy as np
 
-from ..core.events import EventKind, EventQueue, churn_events, poisson_process
+from ..core.events import (ChurnEvent, EventKind, EventQueue, churn_events,
+                           poisson_process)
 from ..core.latency import evaluate
 from ..core.mobility import MultiGroupMobility, RPGParams
 from ..core.ould import Problem
@@ -60,14 +81,12 @@ from ..core.planner import (HorizonView, NoisyHorizonView, SnapshotView,
                             StaleView, available_planners, make_view)
 from ..core.profiles import ModelProfile, lenet_profile
 from ..core.radio import RadioParams, rate_matrix
+from .queueing import DeadlineClass, NodeQueues, ServicePolicy
 from .serve import AdmissionController
 
-# Canonical registry names for the scenario matrix …
+# Canonical registry names for the scenario matrix.
 PLANNER_POLICIES = ("incremental", "incremental-sparse", "ould-mp", "nearest",
                     "hrm", "nearest-hrm")
-# … and the PR-1 policy aliases they replaced (kept for one release).
-POLICY_ALIASES = {"ould": "incremental", "ould_mp": "ould-mp",
-                  "nearest_hrm": "nearest-hrm"}
 POLICIES = PLANNER_POLICIES
 
 MB = 1e6
@@ -94,6 +113,17 @@ class SwarmScenario:
     comp_cap_flops: float = 95e9   # 9.5 GFLOPS × 10 s decision window
     gflops: float = 9.5e9
     deadline_s: float = 1.5
+    # Timeliness tiers: None ⇒ one class at ``deadline_s`` (streams draw a
+    # class uniformly from the tape rng when more than one is given, so the
+    # class assignment is part of the paired event tape).
+    deadline_classes: tuple[DeadlineClass, ...] | None = None
+    # Queue behavior of a saturated node: "<discipline>[+<overload>]", e.g.
+    # "fifo", "edf", "fifo+drop", "edf+degrade:0.25", "fifo+reject"
+    # (ServicePolicy.parse).  "fifo" = work-conserving, no reneging.
+    service_policy: str = "fifo"
+    # Epoch admission prices queue backlog (expected wait at the placed
+    # node) into the bar, not just path cost (AdmissionController).
+    queue_aware_admission: bool = False
     mtbf_s: float = float("inf")   # churn off by default
     mttr_s: float = 30.0
     rel_change: float = 0.05       # incremental-solver link-drift threshold
@@ -125,6 +155,10 @@ class SwarmScenario:
         return np.where(group_of == 0, self.mem_mb_hotspot_group * MB,
                         self.mem_mb_other_groups * MB)
 
+    def classes(self) -> tuple[DeadlineClass, ...]:
+        return (self.deadline_classes
+                or (DeadlineClass("standard", self.deadline_s),))
+
 
 @dataclasses.dataclass(frozen=True)
 class StreamRequest:
@@ -132,7 +166,83 @@ class StreamRequest:
     source: int
     arrive_tick: int
     depart_tick: int
+    klass: int = 0               # index into the scenario's deadline classes
 
+
+# ---------------------------------------------------------------------------
+# Event tape — the frozen stochastic input every policy replays
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class EventTape:
+    """Everything random about one scenario run, drawn once per seed.
+
+    Policies never touch the rng: they replay this tape, which is what makes
+    per-request metrics paired across policies (and what the pairing test
+    pins as data — :meth:`signature`)."""
+
+    n_ticks: int
+    tick_s: float
+    epoch_ticks: int
+    streams: tuple[StreamRequest, ...]
+    arrival_times_s: tuple[float, ...]
+    churn: tuple[ChurnEvent, ...]
+
+    def queue(self) -> EventQueue:
+        """Materialize the event queue (same-time ties pop in the insertion
+        order fixed here: arrivals/departures, churn, epoch, mobility tick,
+        then the tick's queue advance)."""
+        q = EventQueue()
+        for s, t_arr in zip(self.streams, self.arrival_times_s):
+            q.push(t_arr, EventKind.ARRIVAL, s.id)
+            q.push(s.depart_tick * self.tick_s, EventKind.DEPARTURE, s.id)
+        for ce in self.churn:
+            q.push(ce.time, ce.kind, ce.node)
+        for k in range(0, self.n_ticks, self.epoch_ticks):
+            q.push(k * self.tick_s, EventKind.EPOCH)
+        for t in range(self.n_ticks):
+            q.push(t * self.tick_s, EventKind.MOBILITY_TICK, t)
+        for t in range(self.n_ticks):
+            q.push(t * self.tick_s, EventKind.QUEUE_ADVANCE, t)
+        return q
+
+    def signature(self) -> dict[str, np.ndarray]:
+        """The tape as arrays — two runs are paired iff these are equal."""
+        return {
+            "arrive_tick": np.array([s.arrive_tick for s in self.streams]),
+            "depart_tick": np.array([s.depart_tick for s in self.streams]),
+            "source": np.array([s.source for s in self.streams]),
+            "klass": np.array([s.klass for s in self.streams]),
+            "churn_time": np.array([c.time for c in self.churn]),
+            "churn_node": np.array([c.node for c in self.churn]),
+        }
+
+
+def build_event_tape(scn: SwarmScenario, seed: int) -> EventTape:
+    """Draw the scenario's full stochastic input (policy-independent)."""
+    rng = np.random.default_rng(seed)
+    T = scn.duration_ticks
+    n_classes = len(scn.classes())
+    arrivals = poisson_process(rng, scn.arrival_rate_hz, T * scn.tick_s)
+    streams: list[StreamRequest] = []
+    for i, t_arr in enumerate(arrivals):
+        hold = max(1, int(round(rng.exponential(scn.hold_ticks_mean))))
+        src = int(rng.integers(0, min(scn.hotspots, scn.n_uavs)))
+        # Class draw only when tiers exist: a single-class scenario's tape
+        # stays bit-identical to the pre-tier simulator.
+        klass = int(rng.integers(0, n_classes)) if n_classes > 1 else 0
+        at = int(t_arr / scn.tick_s)
+        streams.append(StreamRequest(i, src, at, min(at + hold, T), klass))
+    protected = frozenset(range(min(scn.hotspots, scn.n_uavs)))
+    churn = churn_events(rng, scn.n_uavs, T * scn.tick_s, scn.mtbf_s,
+                         scn.mttr_s, protected=protected)
+    return EventTape(T, scn.tick_s, scn.epoch_ticks, tuple(streams),
+                     tuple(float(t) for t in arrivals), tuple(churn))
+
+
+# ---------------------------------------------------------------------------
+# Results
+# ---------------------------------------------------------------------------
 
 @dataclasses.dataclass
 class EpochLog:
@@ -144,6 +254,7 @@ class EpochLog:
     solve_time_s: float
     objective: float
     feasible: bool
+    n_queue_rejected: int = 0    # streams the queue-depth bar turned away
 
 
 @dataclasses.dataclass
@@ -151,14 +262,41 @@ class SimResult:
     policy: str
     n_arrivals: int
     n_never_admitted: int        # streams rejected at every epoch they lived
-    served: int                  # serve attempts by admitted streams
-    missed: int                  # serves beyond deadline (incl. link outage)
-    latencies: np.ndarray        # finite realized per-serve latencies (s)
+    served: int                  # frame serve attempts by admitted streams
+    missed: int                  # over-deadline completions + outage serves
+    latencies: np.ndarray        # finite realized per-frame latencies (s)
     epochs: list[EpochLog]
+    outages: int = 0             # serves lost to dead nodes / faded links
+    dropped: int = 0             # frames reneged by the drop policy
+    degraded: int = 0            # frames served in skip/light form
+    frames_rejected: int = 0     # frames turned away at the queue (reject)
+    wait_total_s: float = 0.0    # total queueing delay across completions
+    # (N,) offered service seconds per node over the whole run;
+    # max / horizon = realized overload factor at the hottest queue
+    queue_demand_s: np.ndarray = dataclasses.field(
+        default_factory=lambda: np.zeros(0))
 
     @property
     def deadline_miss_rate(self) -> float:
         return self.missed / self.served if self.served else 0.0
+
+    @property
+    def over_deadline_miss_rate(self) -> float:
+        """Misses that *completed* but late — ``missed`` minus outages."""
+        return (self.missed - self.outages) / self.served if self.served \
+            else 0.0
+
+    @property
+    def outage_rate(self) -> float:
+        return self.outages / self.served if self.served else 0.0
+
+    @property
+    def loss_rate(self) -> float:
+        """Frames that produced no timely decision: late completions,
+        outages, policy drops, and queue rejections."""
+        if not self.served:
+            return 0.0
+        return (self.missed + self.dropped + self.frames_rejected) / self.served
 
     @property
     def rejection_rate(self) -> float:
@@ -168,10 +306,30 @@ class SimResult:
     def avg_latency_s(self) -> float:
         return float(self.latencies.mean()) if self.latencies.size else float("inf")
 
+    def _percentile(self, q: float) -> float:
+        finite = self.latencies[np.isfinite(self.latencies)]
+        return float(np.percentile(finite, q)) if finite.size else float("inf")
+
+    @property
+    def p50_latency_s(self) -> float:
+        return self._percentile(50.0)
+
+    @property
+    def p99_latency_s(self) -> float:
+        return self._percentile(99.0)
+
+    @property
+    def p999_latency_s(self) -> float:
+        return self._percentile(99.9)
+
     @property
     def total_resolve_s(self) -> float:
         return float(sum(e.solve_time_s for e in self.epochs))
 
+
+# ---------------------------------------------------------------------------
+# Scalar serve references (kept as the vectorized path's ground truth)
+# ---------------------------------------------------------------------------
 
 def _masked(rates: np.ndarray, alive: np.ndarray) -> np.ndarray:
     """Zero every link touching a dead node (ρ = 0 ⇔ disconnected)."""
@@ -199,7 +357,9 @@ def _spb(rates: np.ndarray) -> np.ndarray:
 def _serve_once(path: np.ndarray, src: int, spb_t: np.ndarray,
                 alive: np.ndarray, K: list[float], Ks: float,
                 comp: list[float], speed: np.ndarray) -> float:
-    """Realized end-to-end latency of one frame at one tick (inf = outage)."""
+    """Scalar reference: uncontended end-to-end latency of one frame at one
+    tick (inf = outage).  The vectorized serve step must reproduce this for
+    every frame when queues are empty — pinned by a test."""
     if not alive[src] or not alive[path].all():
         return float("inf")
     lat = 0.0 if path[0] == src else Ks * spb_t[src, int(path[0])]
@@ -208,26 +368,6 @@ def _serve_once(path: np.ndarray, src: int, spb_t: np.ndarray,
         lat += comp[j] / speed[i]
         if j + 1 < len(path) and path[j + 1] != i:
             lat += K[j] * spb_t[i, int(path[j + 1])]
-    return float(lat)
-
-
-def _serve_once_executed(path: np.ndarray, src: int, spb_t: np.ndarray,
-                         alive: np.ndarray, K: list[float], Ks: float,
-                         measure) -> float:
-    """Executed-latency variant: per-stage *measured* wall-clock (``measure
-    (layer_start, layer_end) → s``, repro.exec engine) replaces the analytic
-    compute term; link delays stay priced per realized tick (Eq. 1)."""
-    if not alive[src] or not alive[path].all():
-        return float("inf")
-    stages = to_stages(path)
-    lat = (0.0 if stages[0].node == src
-           else Ks * spb_t[src, stages[0].node])
-    prev = stages[0].node
-    for st in stages:
-        if st.node != prev:
-            lat += K[st.layer_start - 1] * spb_t[prev, st.node]
-        lat += measure(st.layer_start, st.layer_end)
-        prev = st.node
     return float(lat)
 
 
@@ -269,6 +409,305 @@ def _stage_measurer(scn: SwarmScenario, profile: ModelProfile, seed: int):
     return measure
 
 
+# ---------------------------------------------------------------------------
+# Placement table — struct-of-arrays over currently placed streams
+# ---------------------------------------------------------------------------
+
+class _PlacementTable:
+    """The serve step's working set: parallel arrays over placed streams.
+
+    Rebuilt whenever the placement dict changes (epoch re-solve, stream
+    departure); between rebuilds the per-tick serve step is pure numpy
+    gathers over these arrays.  Each stream's *queueing point* is the node
+    hosting its heaviest stage (the compute bottleneck); ``service_s`` is
+    that stage's wall and ``comp_s`` the whole path's compute, so
+    ``base + service == uncontended latency`` exactly."""
+
+    def __init__(self, comp: np.ndarray, speed: np.ndarray,
+                 deadline_of: np.ndarray, measure=None):
+        self._comp = comp                    # (M,) FLOPs per layer
+        self._speed = speed                  # (N,) FLOPs/s
+        self._deadline_of = deadline_of      # (n_classes,) seconds
+        self._measure = measure              # executed-mode stage wall lookup
+        self.clear()
+
+    def clear(self) -> None:
+        self.ids = np.zeros(0, np.int64)
+        self.src = np.zeros(0, np.int64)
+        self.path = np.zeros((0, self._comp.size), np.int64)
+        self.arrive = np.zeros(0, np.int64)
+        self.depart = np.zeros(0, np.int64)
+        self.deadline_s = np.zeros(0)
+        self.q_node = np.zeros(0, np.int64)
+        self.service_s = np.zeros(0)
+        self.comp_s = np.zeros(0)
+
+    def rebuild(self, placed: dict[int, np.ndarray],
+                streams: dict[int, "StreamRequest"]) -> None:
+        ids = sorted(placed)
+        S, M = len(ids), self._comp.size
+        self.ids = np.array(ids, np.int64)
+        self.path = (np.stack([placed[i] for i in ids])
+                     if ids else np.zeros((0, M), np.int64))
+        self.src = np.array([streams[i].source for i in ids], np.int64)
+        self.arrive = np.array([streams[i].arrive_tick for i in ids],
+                               np.int64)
+        self.depart = np.array([streams[i].depart_tick for i in ids],
+                               np.int64)
+        self.deadline_s = self._deadline_of[
+            np.array([streams[i].klass for i in ids], np.int64)] \
+            if ids else np.zeros(0)
+        if not ids:
+            self.q_node = np.zeros(0, np.int64)
+            self.service_s = np.zeros(0)
+            self.comp_s = np.zeros(0)
+            return
+        if self._measure is None:
+            per_layer = self._comp[None, :] / self._speed[self.path]
+            rows = np.arange(S)[:, None]
+            stage_id = np.zeros((S, M), np.int64)
+            stage_id[:, 1:] = np.cumsum(self.path[:, 1:] != self.path[:, :-1],
+                                        axis=1)
+            stage_sum = np.zeros((S, M))
+            np.add.at(stage_sum, (np.broadcast_to(rows, (S, M)), stage_id),
+                      per_layer)
+            per_layer_stage = stage_sum[np.broadcast_to(rows, (S, M)),
+                                        stage_id]
+            j_star = np.argmax(per_layer_stage, axis=1)
+            self.service_s = per_layer_stage[np.arange(S), j_star]
+            self.q_node = self.path[np.arange(S), j_star]
+            self.comp_s = per_layer.sum(axis=1)
+        else:                               # executed mode: measured walls
+            q_node = np.zeros(S, np.int64)
+            service = np.zeros(S)
+            comp_s = np.zeros(S)
+            for row in range(S):
+                walls = [(self._measure(st.layer_start, st.layer_end),
+                          st.node) for st in to_stages(self.path[row])]
+                comp_s[row] = sum(w for w, _ in walls)
+                service[row], q_node[row] = max(walls)
+            self.q_node, self.service_s, self.comp_s = q_node, service, comp_s
+
+    def active_rows(self, tick: int) -> np.ndarray:
+        return np.flatnonzero((self.arrive <= tick) & (tick < self.depart))
+
+
+# ---------------------------------------------------------------------------
+# The simulation — tape replay over the layered runtime
+# ---------------------------------------------------------------------------
+
+class _Simulation:
+    """One policy replaying one tape: epoch loop (admission + placement),
+    vectorized serve step (frame emission), and queue advance (completion
+    accounting) — the decomposed form of the old monolithic ``simulate``."""
+
+    def __init__(self, scn: SwarmScenario, policy: str, seed: int,
+                 profile: ModelProfile, cold_resolves: bool):
+        if policy not in available_planners():
+            raise ValueError(f"unknown policy {policy!r}; one of "
+                             f"{available_planners()}")
+        self.scn = scn
+        self.policy = policy
+        self.seed = seed
+        self.profile = profile
+        self.tape = build_event_tape(scn, seed)
+        self.streams = {s.id: s for s in self.tape.streams}
+
+        mob = scn.mobility(seed)
+        T = scn.duration_ticks
+        pos = mob.positions(T, seed=seed + 1)
+        self.rates_t = [rate_matrix(pos[t], scn.radio) for t in range(T)]
+        self.mem_cap = scn.mem_cap(mob.group_of)
+        self.comp_cap = np.full(scn.n_uavs, scn.comp_cap_flops)
+        self.speed = np.full(scn.n_uavs, scn.gflops)
+        self.K = np.asarray(profile.output_vector())
+        self.Ks = profile.input_bytes
+        self.comp = np.asarray(profile.compute_vector())
+        self.deadline_of = np.array([c.deadline_s for c in scn.classes()])
+
+        self.ctrl = AdmissionController(policy, solver="dp",
+                                        warm=not cold_resolves,
+                                        rel_change=scn.rel_change,
+                                        max_path_cost=scn.max_path_cost_s,
+                                        sparse_k=scn.sparse_k)
+        self.wants_horizon = getattr(self.ctrl.planner, "preferred_view",
+                                     "snapshot") == "horizon"
+        self.degradation = _parse_degradation(scn.view_degradation)
+        measure = (_stage_measurer(scn, profile, seed) if scn.execute
+                   else None)
+        self.table = _PlacementTable(self.comp, self.speed, self.deadline_of,
+                                     measure)
+        self.queues = NodeQueues(scn.n_uavs,
+                                 ServicePolicy.parse(scn.service_policy))
+
+        # mutable run state
+        self.alive = np.ones(scn.n_uavs, bool)
+        self.active: dict[int, StreamRequest] = {}
+        self.placed: dict[int, np.ndarray] = {}
+        self.ever_admitted: set[int] = set()
+        self._dirty = False                  # placement arrays need rebuild
+        self._pending: dict | None = None    # this tick's emitted frames
+        self.epochs: list[EpochLog] = []
+        self._lat_chunks: list[np.ndarray] = []
+        self.served = self.missed = self.outages = 0
+        self.dropped = self.degraded = self.frames_rejected = 0
+        self.wait_total_s = 0.0
+
+    # -- epoch layer --------------------------------------------------------
+    def _build_view(self, tick: int):
+        """The planner's view of the network at this epoch — fresh by
+        default, degraded when the scenario asks (serving always happens on
+        the realized per-tick rates, so the gap is measured, not assumed)."""
+        scn, T = self.scn, self.scn.duration_ticks
+        stale = 0
+        if self.degradation is not None and self.degradation[0] == "stale":
+            stale = int(self.degradation[1])
+        seen = max(0, tick - stale)
+        if self.wants_horizon:  # the epoch's predicted rates (Eq. 14 horizon)
+            end = min(seen + scn.epoch_ticks, T)
+            view = HorizonView(np.stack(self.rates_t[seen:end]),
+                               self.alive.copy())
+            if self.degradation is not None and self.degradation[0] == "noisy":
+                view = NoisyHorizonView.corrupt(
+                    view, self.degradation[1],
+                    seed=self.seed * 100003 + tick)
+            return view
+        if stale:
+            return StaleView(self.rates_t[seen], self.alive.copy(),
+                             age_ticks=stale)
+        return make_view(self.rates_t[tick], self.alive.copy())
+
+    def on_epoch(self, tick: int) -> None:
+        scn = self.scn
+        act = sorted(self.active.values(), key=lambda s: s.id)
+        self.placed = {}
+        self._dirty = True
+        if not act:
+            self.epochs.append(EpochLog(tick, 0, 0, 0, 0, 0.0, 0.0, True))
+            return
+        sources = np.array([s.source for s in act], np.int64)
+        ids = [s.id for s in act]
+        view = self._build_view(tick)
+        backlog = (self.queues.backlog_s(tick * scn.tick_s)
+                   if scn.queue_aware_admission else None)
+        deadline_s = self.deadline_of[np.array([s.klass for s in act])]
+        plan = self.ctrl.admit(
+            Problem(self.profile, self.mem_cap, self.comp_cap, view.rates,
+                    sources, self.speed), view, request_ids=ids,
+            backlog_s=backlog, deadline_s=deadline_s)
+        stats = plan.solve_stats
+        n_kept = stats.n_kept if stats is not None else 0
+        n_rep = stats.n_replaced if stats is not None else len(act)
+        for row, s in enumerate(act):
+            if plan.admitted[row]:
+                self.placed[s.id] = plan.assign[row]
+                self.ever_admitted.add(s.id)
+        # capacity invariant under the *snapshot* problem (Eq. 4/5)
+        feas_prob = SnapshotView(self.rates_t[tick], self.alive.copy()).bind(
+            Problem(self.profile, self.mem_cap, self.comp_cap,
+                    self.rates_t[tick], sources, self.speed))
+        ev = evaluate(feas_prob, plan.solution)
+        self.epochs.append(EpochLog(
+            tick, len(act), plan.n_admitted, n_kept, n_rep,
+            plan.solve_time_s, plan.objective, ev.feasible,
+            self.ctrl.last_queue_rejected))
+
+    # -- serve layer (vectorized frame emission) ----------------------------
+    def on_tick(self, t: int) -> None:
+        if self._dirty:
+            self.table.rebuild(self.placed, self.streams)
+            self._dirty = False
+        rows = self.table.active_rows(t)
+        if rows.size == 0:
+            return
+        tab, K, Ks = self.table, self.K, self.Ks
+        spb_t = _spb(_masked(self.rates_t[t], self.alive))
+        src, path = tab.src[rows], tab.path[rows]
+        outage = ~self.alive[src] | (~self.alive[path]).any(axis=1)
+
+        first = path[:, 0]
+        with np.errstate(invalid="ignore"):
+            link_s = np.where(first == src, 0.0, Ks * spb_t[src, first])
+            for j in range(path.shape[1] - 1):
+                a, b = path[:, j], path[:, j + 1]
+                link_s = link_s + np.where(a == b, 0.0, K[j] * spb_t[a, b])
+        outage |= ~np.isfinite(link_s)
+
+        self.served += rows.size
+        n_out = int(outage.sum())
+        self.outages += n_out
+        self.missed += n_out                 # inf > any deadline
+        ok = ~outage
+        if not ok.any():
+            return
+        r = rows[ok]
+        arrival = np.full(r.size, t * self.scn.tick_s)
+        # base excludes the bottleneck stage: the queue adds it back as the
+        # frame's service (possibly degraded), so base + service == the
+        # scalar reference exactly when queues are empty.
+        base = link_s[ok] + tab.comp_s[r] - tab.service_s[r]
+        self._pending = {
+            "node": tab.q_node[r], "arrival": arrival,
+            "service": tab.service_s[r],
+            "deadline_abs": arrival + tab.deadline_s[r],
+            "base": base,
+        }
+
+    # -- queue layer (completion accounting) --------------------------------
+    def on_queue_advance(self, t: int) -> None:
+        if self._pending is None:
+            return
+        p, self._pending = self._pending, None
+        out = self.queues.advance(p["node"], p["arrival"], p["service"],
+                                  p["deadline_abs"])
+        self.dropped += int(out.dropped.sum())
+        self.frames_rejected += int(out.rejected.sum())
+        self.degraded += int(out.degraded.sum())
+        done = out.completed
+        if not done.any():
+            return
+        lat = p["base"][done] + out.wait_s[done] + out.service_used_s[done]
+        self.wait_total_s += float(out.wait_s[done].sum())
+        self.missed += int((lat > p["deadline_abs"][done]
+                            - p["arrival"][done]).sum())
+        finite = lat[np.isfinite(lat)]
+        if finite.size:
+            self._lat_chunks.append(finite)
+
+    # -- driver -------------------------------------------------------------
+    def run(self) -> SimResult:
+        q = self.tape.queue()
+        while q:
+            ev = q.pop()
+            if ev.kind == EventKind.ARRIVAL:
+                self.active[ev.payload] = self.streams[ev.payload]
+            elif ev.kind == EventKind.DEPARTURE:
+                self.active.pop(ev.payload, None)
+                if self.placed.pop(ev.payload, None) is not None:
+                    self._dirty = True
+            elif ev.kind == EventKind.NODE_FAIL:
+                self.alive[ev.payload] = False
+            elif ev.kind == EventKind.NODE_REJOIN:
+                self.alive[ev.payload] = True
+            elif ev.kind == EventKind.EPOCH:
+                self.on_epoch(int(round(ev.time / self.scn.tick_s)))
+            elif ev.kind == EventKind.MOBILITY_TICK:
+                self.on_tick(ev.payload)
+            elif ev.kind == EventKind.QUEUE_ADVANCE:
+                self.on_queue_advance(ev.payload)
+        lats = (np.concatenate(self._lat_chunks) if self._lat_chunks
+                else np.zeros(0))
+        n_never = sum(1 for s in self.streams.values()
+                      if s.id not in self.ever_admitted)
+        return SimResult(self.policy, len(self.streams), n_never,
+                         self.served, self.missed, lats, self.epochs,
+                         outages=self.outages, dropped=self.dropped,
+                         degraded=self.degraded,
+                         frames_rejected=self.frames_rejected,
+                         wait_total_s=self.wait_total_s,
+                         queue_demand_s=self.queues.demand_s.copy())
+
+
 def simulate(scn: SwarmScenario, policy: str, seed: int = 0, *,
              profile: ModelProfile | None = None,
              cold_resolves: bool = False) -> SimResult:
@@ -278,150 +717,8 @@ def simulate(scn: SwarmScenario, policy: str, seed: int = 0, *,
     baseline the warm-started incremental path is measured against); it only
     affects solve *time*, never the event tape.
     """
-    planner_name = POLICY_ALIASES.get(policy, policy)
-    if planner_name not in available_planners():
-        raise ValueError(f"unknown policy {policy!r}; one of "
-                         f"{available_planners()} (or aliases "
-                         f"{tuple(POLICY_ALIASES)})")
-    profile = profile or lenet_profile()
-    rng = np.random.default_rng(seed)
-    T = scn.duration_ticks
-    mob = scn.mobility(seed)
-    pos = mob.positions(T, seed=seed + 1)
-    rates_t = [rate_matrix(pos[t], scn.radio) for t in range(T)]
-
-    mem_cap = scn.mem_cap(mob.group_of)
-    comp_cap = np.full(scn.n_uavs, scn.comp_cap_flops)
-    speed = np.full(scn.n_uavs, scn.gflops)
-    K = profile.output_vector()
-    Ks = profile.input_bytes
-    comp = profile.compute_vector()
-
-    # --- event tape (identical across policies for a given seed) -----------
-    q = EventQueue()
-    arrivals = poisson_process(rng, scn.arrival_rate_hz, T * scn.tick_s)
-    streams: dict[int, StreamRequest] = {}
-    for i, t_arr in enumerate(arrivals):
-        hold = max(1, int(round(rng.exponential(scn.hold_ticks_mean))))
-        src = int(rng.integers(0, min(scn.hotspots, scn.n_uavs)))
-        at = int(t_arr / scn.tick_s)
-        streams[i] = StreamRequest(i, src, at, min(at + hold, T))
-        q.push(t_arr, EventKind.ARRIVAL, i)
-        q.push(streams[i].depart_tick * scn.tick_s, EventKind.DEPARTURE, i)
-    protected = frozenset(range(min(scn.hotspots, scn.n_uavs)))
-    for ce in churn_events(rng, scn.n_uavs, T * scn.tick_s, scn.mtbf_s,
-                           scn.mttr_s, protected=protected):
-        q.push(ce.time, ce.kind, ce.node)
-    for k in range(0, T, scn.epoch_ticks):
-        q.push(k * scn.tick_s, EventKind.EPOCH)
-    for t in range(T):
-        q.push(t * scn.tick_s, EventKind.MOBILITY_TICK, t)
-
-    # --- state -------------------------------------------------------------
-    alive = np.ones(scn.n_uavs, bool)
-    active: dict[int, StreamRequest] = {}
-    placed: dict[int, np.ndarray] = {}     # stream id → current path
-    ever_admitted: set[int] = set()
-    # One option dict configures every strategy (planners ignore options they
-    # don't consume) — the epoch loop below has no per-strategy branches.
-    ctrl = AdmissionController(planner_name, solver="dp",
-                               warm=not cold_resolves,
-                               rel_change=scn.rel_change,
-                               max_path_cost=scn.max_path_cost_s,
-                               sparse_k=scn.sparse_k)
-    wants_horizon = getattr(ctrl.planner, "preferred_view",
-                            "snapshot") == "horizon"
-    degradation = _parse_degradation(scn.view_degradation)
-    measure = (_stage_measurer(scn, profile, seed) if scn.execute else None)
-
-    epochs: list[EpochLog] = []
-    latencies: list[float] = []
-    served = missed = 0
-
-    def build_view(tick: int):
-        """The planner's view of the network at this epoch — fresh by
-        default, degraded when the scenario asks (serving always happens on
-        the realized per-tick rates, so the gap is measured, not assumed)."""
-        stale = 0
-        if degradation is not None and degradation[0] == "stale":
-            stale = int(degradation[1])
-        seen = max(0, tick - stale)
-        if wants_horizon:     # the epoch's predicted rates (Eq. 14 horizon)
-            end = min(seen + scn.epoch_ticks, T)
-            view = HorizonView(np.stack(rates_t[seen:end]), alive.copy())
-            if degradation is not None and degradation[0] == "noisy":
-                view = NoisyHorizonView.corrupt(
-                    view, degradation[1], seed=seed * 100003 + tick)
-            return view
-        if stale:
-            return StaleView(rates_t[seen], alive.copy(), age_ticks=stale)
-        return make_view(rates_t[tick], alive.copy())
-
-    def replace_all(tick: int) -> None:
-        nonlocal placed
-        act = sorted(active.values(), key=lambda s: s.id)
-        placed = {}
-        if not act:
-            epochs.append(EpochLog(tick, 0, 0, 0, 0, 0.0, 0.0, True))
-            return
-        sources = np.array([s.source for s in act], np.int64)
-        ids = [s.id for s in act]
-        view = build_view(tick)
-        plan = ctrl.admit(Problem(profile, mem_cap, comp_cap, view.rates,
-                                  sources, speed), view, request_ids=ids)
-        stats = plan.solve_stats
-        n_kept = stats.n_kept if stats is not None else 0
-        n_rep = stats.n_replaced if stats is not None else len(act)
-        for row, s in enumerate(act):
-            if plan.admitted[row]:
-                placed[s.id] = plan.assign[row]
-                ever_admitted.add(s.id)
-        # capacity invariant under the *snapshot* problem (Eq. 4/5)
-        feas_prob = SnapshotView(rates_t[tick], alive.copy()).bind(
-            Problem(profile, mem_cap, comp_cap, rates_t[tick], sources,
-                    speed))
-        ev = evaluate(feas_prob, plan.solution)
-        epochs.append(EpochLog(tick, len(act), plan.n_admitted,
-                               n_kept, n_rep, plan.solve_time_s,
-                               plan.objective, ev.feasible))
-
-    while q:
-        ev = q.pop()
-        if ev.kind == EventKind.ARRIVAL:
-            active[ev.payload] = streams[ev.payload]
-        elif ev.kind == EventKind.DEPARTURE:
-            active.pop(ev.payload, None)
-            placed.pop(ev.payload, None)
-        elif ev.kind == EventKind.NODE_FAIL:
-            alive[ev.payload] = False
-        elif ev.kind == EventKind.NODE_REJOIN:
-            alive[ev.payload] = True
-        elif ev.kind == EventKind.EPOCH:
-            replace_all(int(round(ev.time / scn.tick_s)))
-        elif ev.kind == EventKind.MOBILITY_TICK:
-            t = ev.payload
-            spb_t = _spb(_masked(rates_t[t], alive))
-            for sid, path in placed.items():
-                s = streams[sid]
-                if not (s.arrive_tick <= t < s.depart_tick):
-                    continue
-                if measure is not None:
-                    lat = _serve_once_executed(path, s.source, spb_t, alive,
-                                               K, Ks, measure)
-                else:
-                    lat = _serve_once(path, s.source, spb_t, alive, K, Ks,
-                                      comp, speed)
-                served += 1
-                if lat > scn.deadline_s:
-                    missed += 1
-                if np.isfinite(lat):
-                    # every finite serve counts toward the latency average —
-                    # censoring over-deadline serves would reward missing
-                    latencies.append(lat)
-
-    n_never = sum(1 for s in streams.values() if s.id not in ever_admitted)
-    return SimResult(policy, len(streams), n_never, served, missed,
-                     np.asarray(latencies), epochs)
+    return _Simulation(scn, policy, seed, profile or lenet_profile(),
+                       cold_resolves).run()
 
 
 def compare_policies(scn: SwarmScenario, seed: int = 0,

@@ -13,8 +13,8 @@ from repro.core import (Problem, SnapshotView, Solution, get_planner,
 from repro.core.mobility import RPGMobility, RPGParams
 from repro.core.planner import Plan
 from repro.core.radio import RadioParams, rate_matrix
-from repro.exec import (ExecutionEngine, calibrated_problem, compile_plan,
-                        layer_fns_for)
+from repro.exec import (ExecutionEngine, calibrated_problem, coalesce_graphs,
+                        compile_plan, layer_fns_for)
 from repro.exec.stage_graph import stage_signature
 
 MB = 1e6
@@ -154,6 +154,67 @@ def test_topological_task_order():
         consumer = min(i for k, i in pos.items()
                        if k[0] == tr.dst_node and k[1] == tr.layer)
         assert producer < consumer
+
+
+def test_coalesce_graphs_batches_across_arrival_rounds():
+    """Three admission rounds of the same hotspot cut collapse to one
+    launch per stage; request ids shift by the round offsets."""
+    profile = lenet_profile()
+    prob = _uniform_problem(profile, requests=2)
+    graphs = [compile_plan(_manual_plan(prob, [[3, 4], [3, 4]]))
+              for _ in range(3)]
+    merged = coalesce_graphs(graphs)
+    assert merged.n_requests == 6
+    assert merged.requests == (0, 1, 2, 3, 4, 5)
+    # same stages as one round — six requests ride two launches
+    assert len(merged.tasks) == 2
+    assert all(t.requests == (0, 1, 2, 3, 4, 5) for t in merged.tasks)
+    assert sum(len(g.tasks) for g in graphs) == 6      # 3× launch reduction
+    # transfers carried over verbatim, re-identified
+    assert len(merged.transfers) == 3 * len(graphs[0].transfers)
+    base = {(tr.src_node, tr.dst_node, tr.layer, tr.nbytes, tr.delay_s)
+            for tr in graphs[0].transfers}
+    for tr in merged.transfers:
+        assert (tr.src_node, tr.dst_node, tr.layer, tr.nbytes,
+                tr.delay_s) in base
+
+
+def test_coalesce_graphs_execution_equivalent():
+    """Batched-across-arrival execution matches per-round execution on the
+    same frames (the tentpole's exactness criterion)."""
+    profile = lenet_profile()
+    prob = _uniform_problem(profile, requests=2)
+    fns = layer_fns_for(profile, key=jax.random.PRNGKey(3))
+    engine = ExecutionEngine(fns)
+    rng = np.random.default_rng(7)
+    rounds = [compile_plan(_manual_plan(prob, [[3, 4], [1, 4, 2]]))
+              for _ in range(2)]
+    frames = _frames(rng, 4, (326, 595, 3))
+    merged = coalesce_graphs(rounds)
+    got = engine.run(merged, frames)
+    for i, g in enumerate(rounds):
+        solo = engine.run(g, frames[2 * i: 2 * i + 2])
+        for r in g.requests:
+            err = np.abs(got.outputs[r + 2 * i] - solo.outputs[r]).max()
+            assert err < TOL, (i, r, err)
+        # link pricing identical: coalescing never reroutes a transfer
+        for r in g.requests:
+            assert got.comm_s[r + 2 * i] == pytest.approx(solo.comm_s[r])
+    # fewer launches than the per-round executions combined
+    assert len(merged.tasks) < sum(len(g.tasks) for g in rounds)
+
+
+def test_coalesce_graphs_rejects_model_mismatch():
+    lenet = compile_plan(_manual_plan(_uniform_problem(lenet_profile()),
+                                      [[3, 4], [3, 4]]))
+    vgg = compile_plan(_manual_plan(_uniform_problem(vgg16_profile()),
+                                    [[5, 13], [5, 13]]))
+    with pytest.raises(ValueError, match="n_layers"):
+        coalesce_graphs([lenet, vgg])
+    with pytest.raises(ValueError, match="at least one"):
+        coalesce_graphs([])
+    with pytest.raises(ValueError, match="offsets"):
+        coalesce_graphs([lenet], offsets=[0, 2])
 
 
 def test_calibration_reduces_resolve_mae():

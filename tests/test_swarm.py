@@ -9,7 +9,10 @@ from repro.core import (IncrementalSolver, MultiGroupMobility, Problem,
 from repro.core.events import EventKind, EventQueue, churn_events, poisson_process
 from repro.core.ould import Solution
 from repro.core.profiles import LayerProfile, ModelProfile
-from repro.runtime.swarm import SwarmScenario, compare_policies, simulate
+from repro.runtime.queueing import DeadlineClass
+from repro.runtime.swarm import (SimResult, SwarmScenario, _serve_once,
+                                 _Simulation, _masked, _spb, build_event_tape,
+                                 compare_policies, simulate)
 
 MB = 1e6
 
@@ -72,8 +75,8 @@ def test_multigroup_links_fade_and_window_deterministic():
 # ---------------------------------------------------------------------------
 
 def test_simulator_deterministic_under_fixed_seed():
-    a = simulate(SMALL, "ould", seed=5)
-    b = simulate(SMALL, "ould", seed=5)
+    a = simulate(SMALL, "incremental", seed=5)
+    b = simulate(SMALL, "incremental", seed=5)
     np.testing.assert_array_equal(a.latencies, b.latencies)
     assert (a.served, a.missed, a.n_arrivals, a.n_never_admitted) == \
            (b.served, b.missed, b.n_arrivals, b.n_never_admitted)
@@ -81,15 +84,15 @@ def test_simulator_deterministic_under_fixed_seed():
 
 
 def test_same_event_tape_across_policies():
-    res = compare_policies(SMALL, seed=1, policies=("ould", "nearest"))
-    a, b = res["ould"], res["nearest"]
+    res = compare_policies(SMALL, seed=1, policies=("incremental", "nearest"))
+    a, b = res["incremental"], res["nearest"]
     assert a.n_arrivals == b.n_arrivals
     assert [e.tick for e in a.epochs] == [e.tick for e in b.epochs]
     assert [e.n_active for e in a.epochs] == [e.n_active for e in b.epochs]
 
 
-@pytest.mark.parametrize("policy", ["ould", "ould_mp", "nearest", "hrm",
-                                    "nearest_hrm"])
+@pytest.mark.parametrize("policy", ["incremental", "ould-mp", "nearest",
+                                    "hrm", "nearest-hrm"])
 def test_capacity_invariants_every_epoch(policy):
     r = simulate(SMALL, policy, seed=2)
     assert r.epochs, "simulation must hit at least one epoch boundary"
@@ -101,9 +104,16 @@ def test_mp_beats_snapshot_ould_on_predicted_disconnections():
     """Two-group sweep, no churn: every disconnection is predictable, so
     OULD-MP must out-serve snapshot OULD on deadline misses (Fig. 13)."""
     scn = SwarmScenario(arrival_rate_hz=0.3)   # mobility fade only
-    mp = simulate(scn, "ould_mp", seed=0)
-    snap = simulate(scn, "ould", seed=0)
+    mp = simulate(scn, "ould-mp", seed=0)
+    snap = simulate(scn, "incremental", seed=0)
     assert mp.deadline_miss_rate < snap.deadline_miss_rate
+
+
+def test_policy_aliases_removed():
+    """PR 2's deprecated aliases are gone: only canonical registry names."""
+    for legacy in ("ould", "ould_mp", "nearest_hrm"):
+        with pytest.raises(ValueError, match="unknown policy"):
+            simulate(SMALL, legacy, seed=0)
 
 
 # ---------------------------------------------------------------------------
@@ -294,6 +304,150 @@ def test_bad_degradation_spec_rejected():
     with pytest.raises(ValueError, match="degradation"):
         simulate(dataclasses.replace(SMALL, view_degradation="fog:1"),
                  "incremental", seed=0)
+
+
+# ---------------------------------------------------------------------------
+# queueing runtime (event tape, tail metrics, overload policies)
+# ---------------------------------------------------------------------------
+
+def test_event_tape_pairing_invariant():
+    """Same seed ⇒ bit-identical stochastic input, policy-independent."""
+    a, b = build_event_tape(SMALL, 9), build_event_tape(SMALL, 9)
+    for key, arr in a.signature().items():
+        np.testing.assert_array_equal(arr, b.signature()[key])
+    other = build_event_tape(SMALL, 10).signature()
+    assert any(not np.array_equal(v, other[k])
+               for k, v in a.signature().items())
+    # single deadline class: the class draw is skipped, tape stays legacy
+    assert (a.signature()["klass"] == 0).all()
+
+
+def test_event_tape_draws_classes_only_when_tiered():
+    import dataclasses
+    tiered = dataclasses.replace(SMALL, deadline_classes=(
+        DeadlineClass("interactive", 0.8), DeadlineClass("batch", 6.0)))
+    tape = build_event_tape(tiered, 4)
+    ks = tape.signature()["klass"]
+    assert set(np.unique(ks)) == {0, 1}
+    # arrivals/sources unchanged vs the single-class tape: the class draw
+    # must not perturb the rest of the rng stream retroactively
+    single = build_event_tape(SMALL, 4)
+    np.testing.assert_array_equal(tape.signature()["arrive_tick"],
+                                  single.signature()["arrive_tick"])
+
+
+def test_tail_latency_percentiles():
+    lats = (np.arange(1000, dtype=float) + 1.0) / 1000.0
+    r = SimResult("x", 1000, 0, 1000, 0, lats, [])
+    assert r.p50_latency_s == pytest.approx(np.percentile(lats, 50.0))
+    assert r.p99_latency_s == pytest.approx(np.percentile(lats, 99.0))
+    assert r.p999_latency_s == pytest.approx(np.percentile(lats, 99.9))
+    assert r.p50_latency_s < r.p99_latency_s < r.p999_latency_s
+    empty = SimResult("x", 0, 0, 0, 0, np.zeros(0), [])
+    assert empty.p50_latency_s == float("inf")
+    assert empty.p999_latency_s == float("inf")
+
+
+def test_miss_rate_decomposes_into_outage_and_over_deadline():
+    r = simulate(SMALL, "incremental", seed=3)      # churn on ⇒ outages
+    assert r.outages > 0
+    assert r.missed >= r.outages
+    assert r.deadline_miss_rate == pytest.approx(
+        r.over_deadline_miss_rate + r.outage_rate)
+    # frame conservation: every serve attempt is an outage, a completion,
+    # a policy drop, or a queue rejection
+    assert r.served == r.outages + r.latencies.size + r.dropped \
+        + r.frames_rejected
+
+
+def test_vectorized_serve_matches_scalar_reference():
+    """The struct-of-arrays serve step must price each frame exactly like
+    the scalar `_serve_once` reference (queueing adds wait on top of it)."""
+    import dataclasses
+    prof = lenet_profile()
+    scn = dataclasses.replace(SMALL, mtbf_s=float("inf"))
+    sim = _Simulation(scn, "nearest", 11, prof, False)
+    K, Ks = list(prof.output_vector()), prof.input_bytes
+    comp = list(prof.compute_vector())
+    checked = 0
+    orig = sim.on_tick
+
+    def spy(t):
+        nonlocal checked
+        rows = None
+        if not sim._dirty:
+            rows = sim.table.active_rows(t)
+        orig(t)
+        if sim._pending is None:
+            return
+        rows = sim.table.active_rows(t) if rows is None else rows
+        spb_t = _spb(_masked(sim.rates_t[t], sim.alive))
+        scalar = np.array([_serve_once(sim.table.path[r], int(sim.table.src[r]),
+                                       spb_t, sim.alive, K, Ks, comp,
+                                       sim.speed) for r in rows])
+        got = np.sort(sim._pending["base"] + sim._pending["service"])
+        np.testing.assert_allclose(got, np.sort(scalar[np.isfinite(scalar)]),
+                                   rtol=1e-9)
+        checked += len(got)
+
+    sim.on_tick = spy
+    q = sim.tape.queue()
+    while q:
+        ev = q.pop()
+        if ev.kind == EventKind.MOBILITY_TICK:
+            spy(ev.payload)
+            sim._pending = None          # drop frames: pricing-only replay
+        elif ev.kind == EventKind.ARRIVAL:
+            sim.active[ev.payload] = sim.streams[ev.payload]
+        elif ev.kind == EventKind.DEPARTURE:
+            sim.active.pop(ev.payload, None)
+            if sim.placed.pop(ev.payload, None) is not None:
+                sim._dirty = True
+        elif ev.kind == EventKind.EPOCH:
+            sim.on_epoch(int(round(ev.time / scn.tick_s)))
+    assert checked > 50
+
+
+def _overload(**kw) -> SwarmScenario:
+    """Arrival pressure ≥ 2× service capacity: slow nodes (0.5 GFLOPS ⇒
+    multi-second stage walls) under a dense stream load."""
+    import dataclasses
+    return dataclasses.replace(
+        SMALL, mtbf_s=float("inf"), arrival_rate_hz=0.8,
+        hold_ticks_mean=40.0, gflops=5e8, deadline_s=4.0, **kw)
+
+
+def test_drop_and_degrade_beat_no_policy_on_tail_latency():
+    import dataclasses
+    none = simulate(_overload(), "nearest", seed=6)
+    drop = simulate(_overload(service_policy="fifo+drop"), "nearest", seed=6)
+    degr = simulate(_overload(service_policy="fifo+degrade:0.2"), "nearest",
+                    seed=6)
+    assert none.wait_total_s > 0            # the overload is real
+    assert drop.dropped > 0 and degr.degraded > 0
+    assert drop.p99_latency_s < none.p99_latency_s
+    assert degr.p99_latency_s < none.p99_latency_s
+    # identical tape: per-policy arrival counts are paired
+    assert none.n_arrivals == drop.n_arrivals == degr.n_arrivals
+
+
+def test_queue_aware_admission_cuts_deadline_misses():
+    blind = simulate(_overload(), "nearest", seed=3)
+    aware = simulate(_overload(queue_aware_admission=True), "nearest", seed=3)
+    assert sum(e.n_queue_rejected for e in aware.epochs) > 0
+    assert aware.deadline_miss_rate <= blind.deadline_miss_rate
+    assert blind.n_arrivals == aware.n_arrivals   # same tape
+
+
+def test_deadline_classes_tier_the_miss_accounting():
+    import dataclasses
+    scn = _overload(service_policy="edf+drop")
+    tiered = dataclasses.replace(scn, deadline_classes=(
+        DeadlineClass("interactive", 1.0), DeadlineClass("batch", 30.0)))
+    r = simulate(tiered, "nearest", seed=5)
+    assert r.served > 0 and r.dropped > 0
+    # the generous tier keeps the completion pool alive under overload
+    assert r.latencies.size > 0
 
 
 def test_executed_latency_sampling_smoke():
