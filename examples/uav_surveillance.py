@@ -132,6 +132,26 @@ def main() -> None:
           f"deadline_miss={stale.deadline_miss_rate:.3f} "
           f"rejected={stale.rejection_rate:.3f} "
           f"avg_latency={stale.avg_latency_s:.3f}s")
+
+    # Byte-moving transport (DESIGN.md §7): run the placed CNN with every
+    # boundary activation shipped through worker OS processes, then hand the
+    # realized per-link bandwidth to calibrate_rates so the planner re-solves
+    # on measured comm — provenance rides in Plan.problem.comm_source.
+    from repro.exec import calibrated_problem
+    from repro.transport import LoopbackTransport
+
+    with LoopbackTransport(n_workers=2) as tp:
+        lb_engine = ExecutionEngine(layer_fns, transport=tp)
+        lb_report = lb_engine.run(
+            graph, frames, predicted_s=np.asarray(ev.per_request_s))
+        exact = all(np.array_equal(lb_report.outputs[r], report.outputs[r])
+                    for r in graph.requests)
+        cal_prob, recon = calibrated_problem(prob, lb_report, transport=tp)
+        print(f"transport[loopback]: workers={sorted(set(tp.worker_pids))} "
+              f"moved={tp.moved_bytes / 1e6:.1f}MB exact={exact}")
+        print(f"  {recon.summary()}")
+        replan = planner.plan(cal_prob, SnapshotView(cal_prob.rates))
+        print(f"  re-solve priced comm from {replan.problem.comm_source!r}")
     print("uav_surveillance OK")
 
 

@@ -9,7 +9,8 @@ from .heuristics import solve_heuristic
 from .latency import Evaluation, evaluate
 from .mobility import MultiGroupMobility, RPGMobility, RPGParams
 from .ould import (IncrementalSolver, Problem, ResolveStats, Solution,
-                   default_sparse_k, incremental_transfer_cost, solve_ould,
+                   default_sparse_k, improvement_bound,
+                   incremental_transfer_cost, placement_drift, solve_ould,
                    transfer_cost)
 from .ould_mp import (MPResult, solve_offline_fixed, solve_ould_mp,
                       solve_static_resolve)
@@ -33,8 +34,10 @@ __all__ = [
     "TpuLinkModel",
     "available_planners", "balanced_stages", "churn_events",
     "default_sparse_k", "evaluate",
-    "get_planner", "incremental_transfer_cost", "lenet_profile",
-    "lm_profile", "make_view", "ould_pipeline_stages", "poisson_process",
+    "get_planner", "improvement_bound", "incremental_transfer_cost",
+    "lenet_profile",
+    "lm_profile", "make_view", "ould_pipeline_stages", "placement_drift",
+    "poisson_process",
     "rate_matrix", "register_planner", "sinr_matrix", "solve_heuristic",
     "solve_offline_fixed", "solve_ould", "solve_ould_mp",
     "solve_static_resolve", "stage_boundaries", "to_stages", "transfer_cost",

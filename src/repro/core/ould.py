@@ -81,6 +81,10 @@ class Problem:
     sources: np.ndarray          # (R,) source node of each request (μ_{i,r})
     compute_speed: np.ndarray | None = None  # (N,) FLOPs/s for latency eval
     rate_unit_bytes: float = 1 / 8.0  # bits/s rates → bytes = K·8/ρ
+    # Provenance of the rates: "analytic" (radio model) or
+    # "measured:<transport>" when a byte-moving backend calibrated them
+    # (repro.exec.calibrate.calibrate_rates) — rides into Plan.problem.
+    comm_source: str = "analytic"
 
     @property
     def n_nodes(self) -> int:
@@ -807,6 +811,78 @@ def _path_cost(spb: np.ndarray, K: list[float], Ks: float, src: int,
         for j, i in enumerate(path):
             cost += compute_cost[j, int(i)]
     return float(cost)
+
+
+def improvement_bound(prob: Problem, assign: np.ndarray,
+                      admitted: np.ndarray, *, sparse_k: int | None = None,
+                      include_compute: bool = False
+                      ) -> tuple[np.ndarray, np.ndarray]:
+    """Per-request slack-capacity DP lower bound on re-placement cost.
+
+    The epoch keep rule re-places *touched* requests only; this quantifies
+    what that conservatism costs.  For each admitted request the bound
+    solves the single-request lattice DP against the request's **slack
+    capacity** — the residual after every admitted reservation, plus the
+    request's own reservation released (what a re-place of just this
+    request could actually use).  The per-layer-feasibility relaxation
+    means the dense DP value lower-bounds any feasible re-placement; the
+    k-candidate pruned kernel (``sparse_k``; :func:`default_sparse_k` when
+    None, exact at ``k ≥ N``) may miss the optimum's nodes, so the bound is
+    clipped at the current path cost — drift is then never negative, only
+    possibly under-reported.
+
+    Returns ``(bound_s, current_s)`` over plan rows; non-admitted rows are
+    zero.  :func:`placement_drift` is the difference the epoch hook logs.
+    """
+    spb = prob.transfer_cost()
+    K = prob.profile.output_vector()
+    Ks = prob.profile.input_bytes
+    mem = prob.profile.memory_vector()
+    comp = prob.profile.compute_vector()
+    mem_a = np.asarray(mem, float)
+    comp_a = np.asarray(comp, float)
+    compute_cost = None
+    if include_compute and prob.compute_speed is not None:
+        compute_cost = (np.asarray(comp)[:, None]
+                        / prob.compute_speed[None, :]) * prob.horizon()
+
+    rows = [r for r in range(prob.n_requests) if admitted[r]]
+    mem_left = prob.mem_cap.astype(float).copy()
+    comp_left = prob.comp_cap.astype(float).copy()
+    for r in rows:
+        np.subtract.at(mem_left, assign[r], mem_a)
+        np.subtract.at(comp_left, assign[r], comp_a)
+
+    k = sparse_k if sparse_k is not None else default_sparse_k(prob.n_nodes)
+    consts = _sparse_consts(spb, K, mem, comp)
+    bound = np.zeros(prob.n_requests)
+    current = np.zeros(prob.n_requests)
+    for r in rows:
+        path = assign[r]
+        src = int(prob.sources[r])
+        slack_m = mem_left.copy()
+        slack_c = comp_left.copy()
+        np.add.at(slack_m, path, mem_a)       # release own reservation
+        np.add.at(slack_c, path, comp_a)
+        cur = _path_cost(spb, K, Ks, src, path, compute_cost)
+        _, cost = _dp_single_request_sparse(
+            spb, K, Ks, src, mem, comp, slack_m, slack_c, compute_cost,
+            k, consts=consts)
+        current[r] = cur
+        bound[r] = min(cost, cur)
+    return bound, current
+
+
+def placement_drift(prob: Problem, assign: np.ndarray, admitted: np.ndarray,
+                    *, sparse_k: int | None = None,
+                    include_compute: bool = False) -> np.ndarray:
+    """(R,) how far each kept placement drifted from its slack-capacity
+    optimum: current path cost − :func:`improvement_bound` (≥ 0; zero for
+    non-admitted rows and for requests still at their bound)."""
+    bound, current = improvement_bound(prob, assign, admitted,
+                                       sparse_k=sparse_k,
+                                       include_compute=include_compute)
+    return np.maximum(current - bound, 0.0)
 
 
 def _solve_dp(prob: Problem, *, include_compute: bool,

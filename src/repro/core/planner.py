@@ -103,9 +103,10 @@ class TopologyView:
         if self.alive is not None and not bool(np.all(self.alive)):
             mem = np.where(self.alive, mem, 0.0)
             comp = np.where(self.alive, comp, 0.0)
-        return Problem(problem.profile, mem, comp, self.effective_rates(),
-                       problem.sources, problem.compute_speed,
-                       problem.rate_unit_bytes)
+        # replace(), not a positional rebuild: provenance fields
+        # (comm_source) must survive the bind into Plan.problem.
+        return dataclasses.replace(problem, mem_cap=mem, comp_cap=comp,
+                                   rates=self.effective_rates())
 
 
 @dataclasses.dataclass(frozen=True)

@@ -1,25 +1,33 @@
-"""Plan-faithful distributed execution (`repro.exec`) — DESIGN.md §5.
+"""Plan-faithful distributed execution (`repro.exec`) — DESIGN.md §5/§7.
 
 The optimizer stack (``core/``) *prices* a placement analytically; this
 package *runs* it.  Any :class:`~repro.core.planner.Plan` compiles into a
 :class:`StageGraph` (contiguous layer ranges per node, shared stages deduped
 across requests for batching), the :class:`ExecutionEngine` executes each
-stage as a jitted ``apply_layers`` closure and records wall-clock per stage
-and per transfer, and :mod:`repro.exec.calibrate` closes the loop: measured
+stage as a jitted ``apply_layers`` closure — routing every boundary transfer
+through a :mod:`repro.transport` backend — and records wall-clock per stage
+and per transfer.  :mod:`repro.exec.calibrate` closes both loops: measured
 stage timings update :class:`~repro.core.profiles.LayerProfile` compute
-vectors so every registered planner re-solves against realized numbers.
+vectors, and a byte-moving transport's realized per-link bandwidth updates
+the rates (``calibrate_rates``), so every registered planner re-solves
+against realized numbers on both axes.  :mod:`repro.exec.compile_cache`
+makes the jit warmup persistent across processes (churn-rejoin warm start).
 """
 
-from .calibrate import (CalibrationReport, calibrate_profile,
+from . import compile_cache
+from .calibrate import (CalibrationReport, calibrate_profile, calibrate_rates,
                         calibrated_problem, measured_layer_seconds,
                         reconcile)
+from .compile_cache import WarmStartReport, measure_warm_start
 from .engine import ExecutionEngine, ExecutionReport, StageTiming, layer_fns_for
 from .stage_graph import (StageGraph, StageTask, Transfer, coalesce_graphs,
-                          compile_plan)
+                          compile_plan, link_payload_bytes, stage_signature)
 
 __all__ = [
     "CalibrationReport", "ExecutionEngine", "ExecutionReport", "StageGraph",
-    "StageTask", "StageTiming", "Transfer", "calibrate_profile",
-    "calibrated_problem", "coalesce_graphs", "compile_plan", "layer_fns_for",
-    "measured_layer_seconds", "reconcile",
+    "StageTask", "StageTiming", "Transfer", "WarmStartReport",
+    "calibrate_profile", "calibrate_rates", "calibrated_problem",
+    "coalesce_graphs", "compile_cache", "compile_plan", "layer_fns_for",
+    "link_payload_bytes", "measure_warm_start", "measured_layer_seconds",
+    "reconcile", "stage_signature",
 ]

@@ -12,11 +12,15 @@ by tick in topological order:
   the jnp reference paths elsewhere.  With a ``mesh``, divisible batches are
   sharded across its devices (the CPU-device-count mesh CI forces via
   ``--xla_force_host_platform_device_count``);
-* each boundary :class:`Transfer` is charged its analytic link delay
-  (``Problem.transfer_cost()`` — the exact coefficient OULD minimized) and
-  additionally gets the *measured* host serialization wall of materializing
-  the activation, reported separately so the reconciliation can split
-  link-model error from host overhead.
+* each boundary :class:`Transfer` is routed through the engine's
+  :class:`~repro.transport.Transport` backend.  The default
+  ``InProcTransport`` reproduces the pre-transport path bit-for-bit: the
+  analytic link delay (``Problem.transfer_cost()`` — the exact coefficient
+  OULD minimized) plus the *measured* host serialization wall.  The
+  ``loopback`` / ``multiproc`` backends move the real activation bytes
+  through worker OS processes and hand the consuming stage the
+  reconstructed tensor, so the measured hop wall is a realized link sample
+  (per-link bandwidth accumulates on the transport for comm calibration).
 
 ``executed latency`` of a request = measured stage walls along its path +
 modeled link delays — the realized counterpart of
@@ -36,6 +40,7 @@ import numpy as np
 
 from ..core.profiles import ModelProfile
 from ..models import cnn
+from ..transport import InProcTransport, Transport
 from .stage_graph import StageGraph, StageTask
 
 
@@ -61,7 +66,9 @@ class TransferRecord:
     layer: int
     nbytes: float
     delay_s: float        # modeled: nbytes × spb[src, dst]
-    serialize_s: float    # measured: activation materialization wall
+    serialize_s: float    # measured: the transport hop wall (host
+                          #   materialization for inproc; serialize + socket
+                          #   round trip + reconstruct for loopback/multiproc)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -75,6 +82,7 @@ class ExecutionReport:
     compute_s: np.ndarray                   # (R,) measured stage walls only
     comm_s: np.ndarray                      # (R,) modeled link delays only
     predicted_s: np.ndarray | None = None   # (R,) analytic, when supplied
+    transport: str = "inproc"               # backend that carried transfers
 
     def stage_wall(self, layer_start: int, layer_end: int) -> float:
         """Min measured wall over launches of this layer range."""
@@ -125,10 +133,12 @@ class ExecutionEngine:
     """
 
     def __init__(self, layer_fns: Sequence[Callable], *, mesh=None,
-                 data_axis: str = "data"):
+                 data_axis: str = "data",
+                 transport: Transport | None = None):
         self.layer_fns = list(layer_fns)
         self.mesh = mesh
         self.data_axis = data_axis
+        self.transport = transport if transport is not None else InProcTransport()
         self._closures: dict[tuple[int, int], Callable] = {}
         self._warm: set[tuple[int, int, tuple]] = set()
 
@@ -174,6 +184,28 @@ class ExecutionEngine:
             best = min(best, time.perf_counter() - t0)
         return best
 
+    def warm_start(self, signature: Sequence[tuple[int, int]],
+                   frame: np.ndarray) -> float:
+        """Pre-compile the closures of a stage signature (the ``(start, end)``
+        ranges of :func:`~repro.exec.stage_graph.stage_signature`) on one
+        sample frame; returns the total wall.
+
+        This is the churn-rejoin path: with the persistent compilation cache
+        enabled (:mod:`repro.exec.compile_cache`) a node that joins
+        mid-scenario replays compiles as disk-cache hits — milliseconds
+        instead of fresh XLA compiles.  Boundary activations are propagated
+        through the signature itself; a range whose start no prior range
+        produced is fed through a ``[0, start)`` prefix closure.
+        """
+        t_begin = time.perf_counter()
+        acts: dict[int, jax.Array] = {0: jnp.asarray(frame[None])}
+        for s, e in sorted(signature):
+            if s not in acts:
+                acts[s] = self.closure(0, s)(acts[0])
+            acts[e] = jax.block_until_ready(self.closure(s, e)(acts[s]))
+            self._warm.add((s, e, tuple(acts[s].shape)))
+        return time.perf_counter() - t_begin
+
     def _launch(self, task: StageTask, x: jax.Array) -> tuple[jax.Array, float]:
         """Run one batched stage; returns (output, measured wall seconds)."""
         fn = self.closure(task.layer_start, task.layer_end)
@@ -201,18 +233,20 @@ class ExecutionEngine:
         records: list[TransferRecord] = []
 
         for task in graph.tasks:
-            # Boundary shipments INTO this stage: measure the host
-            # serialization of each inbound activation (the real, observable
-            # part of a U2U transfer on this substrate).
+            # Boundary shipments INTO this stage ride the transport backend:
+            # inproc measures the host serialization of the inbound
+            # activation; loopback/multiproc move its bytes to the worker
+            # process owning the destination node and the consuming stage
+            # reads what came back.
             for r in task.requests:
                 tr = transfer_by_consumer.get((r, task.layer_start))
                 if tr is None:
                     continue
-                t0 = time.perf_counter()
-                np.asarray(jax.block_until_ready(acts[r]))
+                res = self.transport.ship(tr.src_node, tr.dst_node, acts[r])
+                acts[r] = res.array
                 records.append(TransferRecord(
                     tr.request, tr.src_node, tr.dst_node, tr.layer,
-                    tr.nbytes, tr.delay_s, time.perf_counter() - t0))
+                    tr.nbytes, tr.delay_s, res.wall_s))
             x = (acts[task.requests[0]] if len(task.requests) == 1
                  else jnp.concatenate([acts[r] for r in task.requests]))
             y, wall = self._launch(task, x)
@@ -231,7 +265,8 @@ class ExecutionEngine:
             executed[r] = compute_s[r] + comm_s[r]
         outputs = {r: np.asarray(acts[r][0]) for r in graph.requests}
         return ExecutionReport(outputs, tuple(timings), tuple(records),
-                               executed, compute_s, comm_s, predicted_s)
+                               executed, compute_s, comm_s, predicted_s,
+                               transport=self.transport.name)
 
     def sequential_reference(self, frames: np.ndarray,
                              requests: Sequence[int]) -> dict[int, np.ndarray]:

@@ -188,3 +188,14 @@ def stage_signature(graph: StageGraph) -> tuple[tuple[int, int], ...]:
     """The unique ``(layer_start, layer_end)`` ranges a graph executes —
     the jit-compilation footprint (one closure per range)."""
     return tuple(sorted({(t.layer_start, t.layer_end) for t in graph.tasks}))
+
+
+def link_payload_bytes(graph: StageGraph) -> dict[tuple[int, int], float]:
+    """Total modeled bytes each directed link carries for this graph — the
+    coverage map of a comm calibration: links listed here are the ones a
+    byte-moving transport will sample when the graph executes."""
+    out: dict[tuple[int, int], float] = {}
+    for tr in graph.transfers:
+        key = (tr.src_node, tr.dst_node)
+        out[key] = out.get(key, 0.0) + tr.nbytes
+    return out

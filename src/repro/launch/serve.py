@@ -28,6 +28,19 @@ def main() -> None:
                     help="run a placed CNN inference through the repro.exec "
                          "engine and report predicted vs measured latency "
                          "(plus a calibrated re-solve)")
+    ap.add_argument("--transport", default="inproc",
+                    choices=("inproc", "loopback", "multiproc"),
+                    help="byte-moving backend for --execute transfers: "
+                         "inproc = modeled delay (default), loopback = "
+                         "worker OS processes over sockets, multiproc = one "
+                         "JAX process per node group; non-inproc backends "
+                         "also calibrate the rates from realized bandwidth "
+                         "before the re-solve")
+    ap.add_argument("--transport-workers", type=int, default=2)
+    ap.add_argument("--compile-cache", default=None, metavar="DIR",
+                    help="persistent XLA compilation cache directory "
+                         "(repro.exec.compile_cache): repeat runs and "
+                         "rejoining nodes warm from disk")
     args = ap.parse_args()
 
     import jax
@@ -73,38 +86,62 @@ def main() -> None:
 
     if args.execute:
         # Plan-faithful execution: place the paper's CNN over the same pool
-        # with the same planner, run it through the exec engine, then re-solve
-        # on the measured-calibrated profile (DESIGN.md §5).
+        # with the same planner, run it through the exec engine (transfers
+        # routed through the chosen transport backend), then re-solve on the
+        # measured-calibrated profile — and, with a byte-moving transport,
+        # on realized link bandwidth too (DESIGN.md §5/§7).
         from repro.core import (Problem, SnapshotView, get_planner,
                                 lenet_profile)
         from repro.exec import (ExecutionEngine, calibrated_problem,
-                                compile_plan, layer_fns_for)
+                                compile_cache, compile_plan, layer_fns_for)
+        from repro.transport import make_transport
 
+        if args.compile_cache:
+            compile_cache.enable(args.compile_cache)
         profile = lenet_profile()
         rng = np.random.default_rng(0)
-        sources = (np.arange(args.batch) % n).astype(np.int64)
-        prob = Problem(profile, np.full(n, 256e6), np.full(n, 95e9),
+        # Hotspot the frames on two camera nodes: lenet wants ~108 MB end to
+        # end, so at 128 MB/node the co-sourced requests must offload part of
+        # their path — the plan has transfers for the transport to carry.
+        sources = (np.arange(args.batch) % min(2, n)).astype(np.int64)
+        prob = Problem(profile, np.full(n, 128e6), np.full(n, 95e9),
                        rates_bits, sources, compute_speed=np.full(n, 9.5e9))
         cnn_plan = get_planner(args.planner, sparse_k=args.sparse_k).plan(
             prob, SnapshotView(rates_bits))
         graph = compile_plan(cnn_plan)
-        engine = ExecutionEngine(layer_fns_for(profile))
+        transport = make_transport(args.transport,
+                                   n_workers=args.transport_workers)
+        engine = ExecutionEngine(layer_fns_for(profile), transport=transport)
         frames = rng.standard_normal(
             (args.batch, 326, 595, 3)).astype(np.float32)
-        report = engine.run(graph, frames,
-                            predicted_s=cnn_plan.evaluate().per_request_s)
-        cal_prob, recon = calibrated_problem(prob, report)
-        replan = get_planner(args.planner, sparse_k=args.sparse_k).plan(
-            cal_prob, SnapshotView(rates_bits))
-        regraph = compile_plan(replan)
-        rereport = engine.run(regraph, frames,
-                              predicted_s=replan.evaluate().per_request_s)
+        try:
+            report = engine.run(graph, frames,
+                                predicted_s=cnn_plan.evaluate().per_request_s)
+            moving = args.transport != "inproc"
+            cal_prob, recon = calibrated_problem(
+                prob, report, transport=transport if moving else None)
+            replan = get_planner(args.planner, sparse_k=args.sparse_k).plan(
+                cal_prob, SnapshotView(cal_prob.rates))
+            regraph = compile_plan(replan)
+            rereport = engine.run(regraph, frames,
+                                  predicted_s=replan.evaluate().per_request_s)
+        finally:
+            transport.close()
         mae0 = report.abs_error_s[list(report.outputs)].mean()
         mae1 = rereport.abs_error_s[list(rereport.outputs)].mean()
         print(f"[exec] tasks={len(graph.tasks)} shared={graph.n_shared} "
               f"transfers={len(graph.transfers)} "
               f"executed_avg={report.executed_s[list(report.outputs)].mean():.4f}s")
         print(f"[exec] {recon.summary()}")
+        if args.transport != "inproc":
+            bw = ", ".join(
+                f"{s}->{d}: {ls.bytes_per_s / 1e6:.0f} MB/s"
+                for (s, d), ls in sorted(transport.link_stats.items()))
+            print(f"[exec] transport={args.transport} "
+                  f"workers={sorted(set(transport.worker_pids))} "
+                  f"moved={transport.moved_bytes / 1e6:.1f}MB ({bw})")
+            print(f"[exec] re-solve priced comm from "
+                  f"{replan.problem.comm_source!r}")
         print(f"[exec] predicted-vs-measured MAE {mae0 * 1e3:.2f}ms -> "
               f"{mae1 * 1e3:.2f}ms after calibrated re-solve")
 

@@ -75,7 +75,7 @@ from ..core.events import (ChurnEvent, EventKind, EventQueue, churn_events,
                            poisson_process)
 from ..core.latency import evaluate
 from ..core.mobility import MultiGroupMobility, RPGParams
-from ..core.ould import Problem
+from ..core.ould import Problem, placement_drift
 from ..core.placement import to_stages
 from ..core.planner import (HorizonView, NoisyHorizonView, SnapshotView,
                             StaleView, available_planners, make_view)
@@ -141,6 +141,20 @@ class SwarmScenario:
     # analytic c_j/speed term; link delays stay priced per realized tick.
     execute: bool = False
     frame_hw: tuple[int, int, int] = (326, 595, 3)
+    # Byte-moving substrate for executed mode (repro.transport): "inproc"
+    # keeps the modeled-delay path; "loopback"/"multiproc" spawn worker OS
+    # processes and ship each newly-seen stage-boundary activation through
+    # them, so SimResult carries realized substrate bandwidth per link.
+    # (Simulated radio delays still price serving — localhost sockets are
+    # not a UAV link; the full rate-substitution loop is the serve CLI /
+    # calibrate_rates path, where the pool IS the substrate.)
+    transport: str = "inproc"
+    # Persistent XLA compile cache dir (repro.exec.compile_cache): executed
+    # mode's engine warms from disk — the churn-rejoin path.
+    compile_cache_dir: str | None = None
+    # Per-epoch slack-capacity DP lower bound (core.ould.placement_drift):
+    # logs how far kept placements drifted from their per-request optimum.
+    track_improvement_bound: bool = False
     radio: RadioParams = RadioParams()
 
     def mobility(self, seed: int) -> MultiGroupMobility:
@@ -255,6 +269,10 @@ class EpochLog:
     objective: float
     feasible: bool
     n_queue_rejected: int = 0    # streams the queue-depth bar turned away
+    # Improvement-bound hook (track_improvement_bound): total / worst gap
+    # between kept placements and their slack-capacity DP lower bound.
+    drift_total_s: float = 0.0
+    drift_max_s: float = 0.0
 
 
 @dataclasses.dataclass
@@ -275,6 +293,10 @@ class SimResult:
     # max / horizon = realized overload factor at the hottest queue
     queue_demand_s: np.ndarray = dataclasses.field(
         default_factory=lambda: np.zeros(0))
+    # Byte-moving substrate telemetry (executed mode with a non-inproc
+    # transport): realized bytes/s per sampled link, worker process pids.
+    transport: str = "inproc"
+    link_bytes_per_s: dict = dataclasses.field(default_factory=dict)
 
     @property
     def deadline_miss_rate(self) -> float:
@@ -325,6 +347,22 @@ class SimResult:
     @property
     def total_resolve_s(self) -> float:
         return float(sum(e.solve_time_s for e in self.epochs))
+
+    # -- improvement-bound hook (track_improvement_bound) -------------------
+    @property
+    def placement_drift_s(self) -> np.ndarray:
+        """Per-epoch total drift of kept placements vs their slack-capacity
+        DP lower bound (zeros unless the scenario tracked the bound)."""
+        return np.array([e.drift_total_s for e in self.epochs])
+
+    @property
+    def mean_placement_drift_s(self) -> float:
+        d = self.placement_drift_s
+        return float(d.mean()) if d.size else 0.0
+
+    @property
+    def max_placement_drift_s(self) -> float:
+        return float(max((e.drift_max_s for e in self.epochs), default=0.0))
 
 
 # ---------------------------------------------------------------------------
@@ -382,17 +420,28 @@ def _parse_degradation(spec: str | None) -> tuple[str, float] | None:
     return mode, float(val or 0.0)
 
 
-def _stage_measurer(scn: SwarmScenario, profile: ModelProfile, seed: int):
+def _stage_measurer(scn: SwarmScenario, profile: ModelProfile, seed: int,
+                    transport=None):
     """Measured-seconds lookup for stage ranges: one ExecutionEngine per
     simulation, one jit + one measurement per unique (start, end) range —
-    hotspot plans collapse to a handful of kernel timings."""
-    from ..exec import ExecutionEngine, layer_fns_for  # lazy: pulls in jax
+    hotspot plans collapse to a handful of kernel timings.
 
-    engine = ExecutionEngine(layer_fns_for(profile))
+    With ``scn.compile_cache_dir`` the engine's jit warmup goes through the
+    persistent compilation cache (repeat scenarios and churn-rejoined nodes
+    warm from disk).  With a byte-moving ``transport``, each newly-seen
+    stage-boundary activation is additionally shipped once through a worker
+    process pair, sampling the substrate's realized bandwidth at that
+    payload size (SimResult.link_bytes_per_s)."""
+    from ..exec import ExecutionEngine, compile_cache, layer_fns_for
+
+    if scn.compile_cache_dir is not None:
+        compile_cache.enable(scn.compile_cache_dir)
+    engine = ExecutionEngine(layer_fns_for(profile), transport=transport)
     rng = np.random.default_rng(seed)
     frame = rng.standard_normal((1, *scn.frame_hw)).astype(np.float32)
     acts: dict[int, object] = {0: frame}   # boundary activations, lazily
     cache: dict[tuple[int, int], float] = {}
+    shipped: set[int] = set()
 
     def act_at(layer: int):
         if layer not in acts:
@@ -404,6 +453,10 @@ def _stage_measurer(scn: SwarmScenario, profile: ModelProfile, seed: int):
         if key not in cache:
             cache[key] = engine.measure_range(layer_start, layer_end,
                                               act_at(layer_start))
+            if (transport is not None and layer_start > 0
+                    and layer_start not in shipped):
+                shipped.add(layer_start)
+                transport.ship(0, 1, act_at(layer_start))
         return cache[key]
 
     return measure
@@ -533,8 +586,14 @@ class _Simulation:
         self.wants_horizon = getattr(self.ctrl.planner, "preferred_view",
                                      "snapshot") == "horizon"
         self.degradation = _parse_degradation(scn.view_degradation)
-        measure = (_stage_measurer(scn, profile, seed) if scn.execute
-                   else None)
+        self.transport = None
+        if scn.execute and scn.transport != "inproc":
+            from ..transport import make_transport
+            self.transport = make_transport(scn.transport,
+                                            group_of=mob.group_of)
+        measure = (_stage_measurer(scn, profile, seed,
+                                   transport=self.transport)
+                   if scn.execute else None)
         self.table = _PlacementTable(self.comp, self.speed, self.deadline_of,
                                      measure)
         self.queues = NodeQueues(scn.n_uavs,
@@ -607,10 +666,19 @@ class _Simulation:
             Problem(self.profile, self.mem_cap, self.comp_cap,
                     self.rates_t[tick], sources, self.speed))
         ev = evaluate(feas_prob, plan.solution)
+        drift_total = drift_max = 0.0
+        if scn.track_improvement_bound and plan.n_admitted:
+            # How far do kept placements drift from each request's own
+            # slack-capacity optimum, judged on the *realized* snapshot?
+            drift = placement_drift(feas_prob, plan.assign, plan.admitted,
+                                    sparse_k=scn.sparse_k)
+            drift_total = float(drift.sum())
+            drift_max = float(drift.max())
         self.epochs.append(EpochLog(
             tick, len(act), plan.n_admitted, n_kept, n_rep,
             plan.solve_time_s, plan.objective, ev.feasible,
-            self.ctrl.last_queue_rejected))
+            self.ctrl.last_queue_rejected,
+            drift_total_s=drift_total, drift_max_s=drift_max))
 
     # -- serve layer (vectorized frame emission) ----------------------------
     def on_tick(self, t: int) -> None:
@@ -676,6 +744,13 @@ class _Simulation:
 
     # -- driver -------------------------------------------------------------
     def run(self) -> SimResult:
+        try:
+            return self._run()
+        finally:
+            if self.transport is not None:
+                self.transport.close()
+
+    def _run(self) -> SimResult:
         q = self.tape.queue()
         while q:
             ev = q.pop()
@@ -699,13 +774,19 @@ class _Simulation:
                 else np.zeros(0))
         n_never = sum(1 for s in self.streams.values()
                       if s.id not in self.ever_admitted)
+        link_bw = ({k: ls.bytes_per_s
+                    for k, ls in self.transport.link_stats.items()}
+                   if self.transport is not None else {})
         return SimResult(self.policy, len(self.streams), n_never,
                          self.served, self.missed, lats, self.epochs,
                          outages=self.outages, dropped=self.dropped,
                          degraded=self.degraded,
                          frames_rejected=self.frames_rejected,
                          wait_total_s=self.wait_total_s,
-                         queue_demand_s=self.queues.demand_s.copy())
+                         queue_demand_s=self.queues.demand_s.copy(),
+                         transport=self.scn.transport if self.scn.execute
+                         else "inproc",
+                         link_bytes_per_s=link_bw)
 
 
 def simulate(scn: SwarmScenario, policy: str, seed: int = 0, *,

@@ -1,0 +1,47 @@
+"""Byte-moving transport backends for the execution engine (DESIGN.md §7).
+
+================  ==========================================================
+backend           what a transfer costs
+================  ==========================================================
+``inproc``        modeled link delay + measured host serialization — the
+                  pre-transport path, bit-compatible default
+``loopback``      real serialization + kernel socket copy to a worker OS
+                  process and back; the consuming stage reads the
+                  reconstructed bytes
+``multiproc``     loopback where every worker is a JAX process (one per
+                  node group, SNIPPETS §2) that lands the buffer on its
+                  device before echoing
+================  ==========================================================
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+from .base import LinkStats, ShipResult, Transport, TransportBase
+from .inproc import InProcTransport
+from .loopback import LoopbackTransport
+from .multiproc import MultiProcTransport
+
+TRANSPORTS = ("inproc", "loopback", "multiproc")
+
+
+def make_transport(name: str, *, n_workers: int = 2,
+                   group_of: np.ndarray | None = None) -> Transport:
+    """Build a backend by registry name (the ``--transport`` CLI values)."""
+    if name == "inproc":
+        return InProcTransport()
+    if name == "loopback":
+        return LoopbackTransport(n_workers=n_workers)
+    if name == "multiproc":
+        return MultiProcTransport(
+            n_workers=None if group_of is not None else n_workers,
+            group_of=group_of)
+    raise ValueError(f"unknown transport {name!r}; one of {TRANSPORTS}")
+
+
+__all__ = [
+    "InProcTransport", "LinkStats", "LoopbackTransport", "MultiProcTransport",
+    "ShipResult", "TRANSPORTS", "Transport", "TransportBase",
+    "make_transport",
+]

@@ -1,0 +1,130 @@
+"""Standalone transport worker process + the framed socket protocol.
+
+One worker == one OS process standing in for a simulated UAV node (or node
+group).  The parent (:class:`~repro.transport.loopback.LoopbackTransport`)
+listens on a localhost TCP socket, spawns workers with ``--connect`` pointing
+back at it, and ships activation buffers through them — real serialization,
+a real kernel-mediated copy, and a real second address space, which is what
+the modeled-delay path never exercised.
+
+Protocol (both directions): ``op`` (1 byte) + ``length`` (8 bytes, ``<Q``)
++ payload.
+
+======  =====================================================================
+op      meaning
+======  =====================================================================
+``H``   worker → parent hello on connect: JSON ``{"pid": …, "backend": …}``
+``S``   parent → worker: ship this buffer to the worker's node
+``R``   worker → parent: the shipped buffer, back from the worker's memory
+``Q``   parent → worker: shut down (no reply)
+======  =====================================================================
+
+In ``--jax`` mode (:class:`MultiProcTransport`) the worker is a real JAX
+process: each shipped buffer is put on the worker's default device before
+being echoed, so the bytes cross process *and* device-buffer boundaries.
+The plain mode deliberately imports nothing heavy — loopback workers must
+start in milliseconds, since churn-rejoin spawns them mid-scenario.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import socket
+import struct
+import sys
+
+_LEN = struct.Struct("<Q")
+
+OP_HELLO = b"H"
+OP_SHIP = b"S"
+OP_REPLY = b"R"
+OP_QUIT = b"Q"
+
+
+def recv_exact(sock: socket.socket, n: int) -> bytes:
+    """Read exactly ``n`` bytes or raise ConnectionError on EOF."""
+    chunks = []
+    while n:
+        chunk = sock.recv(min(n, 1 << 20))
+        if not chunk:
+            raise ConnectionError("transport peer closed the connection")
+        chunks.append(chunk)
+        n -= len(chunk)
+    return b"".join(chunks)
+
+
+def send_frame(sock: socket.socket, op: bytes, payload: bytes = b"") -> None:
+    sock.sendall(op + _LEN.pack(len(payload)))
+    if payload:
+        sock.sendall(payload)
+
+
+def recv_frame(sock: socket.socket) -> tuple[bytes, bytes]:
+    head = recv_exact(sock, 1 + _LEN.size)
+    op, (n,) = head[:1], _LEN.unpack(head[1:])
+    return op, (recv_exact(sock, n) if n else b"")
+
+
+def _echo(payload: bytes, device_put) -> bytes:
+    """The worker-side hop: host bytes → (optionally a device buffer) → host
+    bytes.  Returns the exact same byte string — fidelity is asserted by the
+    parent, not assumed."""
+    if device_put is None:
+        return payload
+    return device_put(payload)
+
+
+def _jax_device_put():
+    """Build the ``--jax`` echo hop lazily (imports jax)."""
+    import jax
+    import jax.numpy as jnp
+    import numpy as np
+
+    def put(payload: bytes) -> bytes:
+        buf = np.frombuffer(payload, dtype=np.uint8)
+        dev = jax.device_put(jnp.asarray(buf))      # host → device buffer
+        return np.asarray(jax.block_until_ready(dev)).tobytes()
+
+    return put
+
+
+def serve(host: str, port: int, *, use_jax: bool) -> None:
+    device_put = None
+    backend = None
+    if use_jax:
+        import jax
+        device_put = _jax_device_put()
+        backend = jax.devices()[0].platform
+    sock = socket.create_connection((host, port), timeout=60.0)
+    sock.setsockopt(socket.IPPROTO_TCP, socket.TCP_NODELAY, 1)
+    hello = json.dumps({"pid": os.getpid(), "backend": backend}).encode()
+    send_frame(sock, OP_HELLO, hello)
+    try:
+        while True:
+            op, payload = recv_frame(sock)
+            if op == OP_SHIP:
+                send_frame(sock, OP_REPLY, _echo(payload, device_put))
+            elif op == OP_QUIT:
+                return
+            else:
+                raise ValueError(f"transport worker: unknown op {op!r}")
+    except ConnectionError:
+        pass        # parent died or closed; nothing left to serve
+    finally:
+        sock.close()
+
+
+def main(argv=None) -> None:
+    ap = argparse.ArgumentParser(description="repro transport worker")
+    ap.add_argument("--connect", required=True, metavar="HOST:PORT")
+    ap.add_argument("--jax", action="store_true",
+                    help="route shipped buffers through a JAX device buffer")
+    args = ap.parse_args(argv)
+    host, _, port = args.connect.rpartition(":")
+    serve(host, int(port), use_jax=args.jax)
+
+
+if __name__ == "__main__":
+    sys.exit(main())

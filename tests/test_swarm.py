@@ -463,3 +463,102 @@ def test_executed_latency_sampling_smoke():
     analytic = simulate(dataclasses.replace(scn, execute=False),
                         "incremental", seed=0)
     assert analytic.served == r.served
+
+
+def test_improvement_bound_invariants():
+    """Slack-capacity DP bound: <= current cost everywhere, zero on
+    non-admitted rows, drift >= 0 (core.ould.improvement_bound)."""
+    from repro.core.ould import improvement_bound, placement_drift
+    from repro.core import SnapshotView, get_planner
+
+    rng = np.random.default_rng(0)
+    mob = MultiGroupMobility(RPGParams(n_uavs=8, area_m=150.0,
+                                       homogeneous=False), n_groups=2, seed=0)
+    rates = rate_matrix(mob.positions(1)[0])
+    sources = rng.integers(0, 3, 5).astype(np.int64)
+    prob = Problem(lenet_profile(), np.full(8, 128 * MB), np.full(8, 95e9),
+                   rates, sources, compute_speed=np.full(8, 9.5e9))
+    plan = get_planner("ould-dp").plan(prob, SnapshotView(rates))
+    assert plan.n_admitted > 0
+
+    bound, current = improvement_bound(prob, plan.assign, plan.admitted)
+    assert (bound <= current + 1e-12).all()
+    assert (bound[~plan.admitted] == 0).all()
+    assert (current[~plan.admitted] == 0).all()
+    drift = placement_drift(prob, plan.assign, plan.admitted)
+    assert (drift >= 0).all()
+    np.testing.assert_allclose(drift, np.maximum(current - bound, 0.0))
+    # sparse kernel stays a valid (possibly looser) bound
+    b_sparse, c_sparse = improvement_bound(prob, plan.assign, plan.admitted,
+                                           sparse_k=3)
+    np.testing.assert_allclose(c_sparse, current)
+    assert (b_sparse <= c_sparse + 1e-12).all()
+
+
+def test_improvement_bound_detects_drifted_placement():
+    """Crashing the rates a kept placement rides makes the slack-capacity
+    re-place strictly cheaper: positive drift (the epoch keep-rule cost)."""
+    from repro.core.ould import placement_drift
+    from repro.core import SnapshotView, get_planner
+
+    mob = MultiGroupMobility(RPGParams(n_uavs=8, area_m=150.0,
+                                       homogeneous=False), n_groups=2, seed=0)
+    rates = rate_matrix(mob.positions(1)[0])
+    sources = np.zeros(4, np.int64)
+    prob = Problem(lenet_profile(), np.full(8, 96 * MB), np.full(8, 95e9),
+                   rates, sources, compute_speed=np.full(8, 9.5e9))
+    plan = get_planner("ould-dp").plan(prob, SnapshotView(rates))
+    assert plan.n_admitted > 0
+
+    # degrade every link the committed paths actually use by 100x
+    crashed = np.array(rates, copy=True)
+    for r in range(4):
+        if not plan.admitted[r]:
+            continue
+        prev = int(prob.sources[r])
+        for node in plan.assign[r]:
+            if node != prev:
+                crashed[prev, node] /= 100.0
+                prev = int(node)
+    drifted = Problem(prob.profile, prob.mem_cap, prob.comp_cap, crashed,
+                      prob.sources, compute_speed=prob.compute_speed)
+    drift = placement_drift(drifted, plan.assign, plan.admitted)
+    assert drift[plan.admitted].max() > 0
+
+
+def test_simulate_tracks_improvement_bound():
+    """track_improvement_bound=True logs the per-epoch drift the keep rule
+    accumulates; the hook never changes serving."""
+    import dataclasses
+    scn = dataclasses.replace(SMALL, duration_ticks=40,
+                              track_improvement_bound=True)
+    r = simulate(scn, "incremental", seed=0)
+    assert r.placement_drift_s.size == len(r.epochs)
+    assert (r.placement_drift_s >= 0).all()
+    assert r.max_placement_drift_s >= r.mean_placement_drift_s >= 0
+    for e in r.epochs:
+        assert e.drift_max_s <= e.drift_total_s + 1e-12
+    baseline = simulate(dataclasses.replace(scn,
+                                            track_improvement_bound=False),
+                        "incremental", seed=0)
+    assert baseline.served == r.served
+    assert baseline.mean_placement_drift_s == 0.0
+
+
+def test_executed_loopback_transport_samples_substrate():
+    """execute=True + transport='loopback': the sim ships each newly-seen
+    boundary activation through worker processes and reports realized
+    substrate bandwidth per link; serving itself stays tape-identical."""
+    import dataclasses
+    scn = dataclasses.replace(SMALL, n_uavs=8, duration_ticks=16,
+                              epoch_ticks=8, execute=True,
+                              transport="loopback")
+    r = simulate(scn, "incremental", seed=0)
+    assert r.transport == "loopback"
+    assert r.served > 0
+    assert r.link_bytes_per_s, "no substrate links sampled"
+    assert all(bw > 0 for bw in r.link_bytes_per_s.values())
+    inproc = simulate(dataclasses.replace(scn, transport="inproc"),
+                      "incremental", seed=0)
+    assert inproc.transport == "inproc" and inproc.link_bytes_per_s == {}
+    assert inproc.served == r.served
