@@ -34,7 +34,13 @@ Claims:
       Lindley queue-advance kernel beats the per-frame python sweep by the
       margin that makes these scenario sizes feasible (the strict speedup
       lock).  Tail latencies are reported per policy as ungated ``_info``
-      metrics; the claim booleans and counters are exact.
+      metrics; the claim booleans and counters are exact;
+  S7  the batched jitted DP kernel (``batch_solve=True``) solves a whole
+      epoch's request batch in one dispatch ≥ 5× faster than the sequential
+      ``ould-dp-sparse`` request loop at N = 1024 — bit-identical admission,
+      assignment, and objective — and the epoch re-solve fits the serving
+      tick budget (the large-N frontier lock; ratio committed as a strict
+      speedup lock in the baseline).
 """
 
 from __future__ import annotations
@@ -183,6 +189,78 @@ def _bench_sparse_dp(csv: Csv, quick: bool) -> dict:
     # run pins the ≥ 3× claim the ROADMAP records.
     assert s5, (f"S5: sparse DP speedup {out['N128']['speedup']:.2f}x "
                 f"at N=128 below the bar")
+    return out
+
+
+def _bench_batched_dp(csv: Csv, quick: bool) -> dict:
+    """S7: batched jitted DP epoch solve vs the sequential request loop.
+
+    Same planner (``ould-dp-sparse``), same instance — ``batch_solve=True``
+    stacks every request's pruned candidate set and runs all (M-1, k, k)
+    min-plus sweeps in one jitted dispatch (``core/batch_dp``), with the
+    fallback ladder applied sequentially only to requests the batched pass
+    rejects.  Regime: a provisioned swarm (8× the paper's HIGH_MEM) with
+    hotspot sources, the epoch re-solve shape the large-N frontier needs —
+    residual-capacity feasibility bits rarely flip mid-batch, so the
+    certified fast path stays hot.  Quick mode keeps BOTH sizes: N = 1024
+    is *the* claim instance and its speedup ratio is the strict lock.
+    """
+    reps = 3 if quick else 5
+    tick_s = SwarmScenario().tick_s
+    out: dict = {}
+    for n, hot in ((256, 32), (1024, 64)):
+        prob = snapshot_problem("lenet", n, n, mem=8 * HIGH_MEM,
+                                area=300.0, seed=0, hotspots=hot)
+        view = SnapshotView(prob.rates)
+        seq = get_planner("ould-dp-sparse")
+        bat = get_planner("ould-dp-sparse", batch_solve=True)
+        bat.plan(prob, view)                 # jit compile off the clock
+        seq_s, bat_s = [], []
+        ps = pb = None
+        for _ in range(reps):                # min-of-N: noise robust
+            t0 = time.perf_counter()
+            ps = seq.plan(prob, view)
+            seq_s.append(time.perf_counter() - t0)
+            t0 = time.perf_counter()
+            pb = bat.plan(prob, view)
+            bat_s.append(time.perf_counter() - t0)
+        speedup = min(seq_s) / max(min(bat_s), 1e-12)
+        identical = bool(np.array_equal(ps.admitted, pb.admitted)
+                         and np.array_equal(ps.assign, pb.assign)
+                         and ps.objective == pb.objective)
+        st = pb.solve_stats
+        under_tick = bool(min(bat_s) <= tick_s)
+        csv.add(f"swarm/batched_dp/N{n}", min(bat_s) * 1e6,
+                f"sequential={min(seq_s) * 1e6:.0f}us "
+                f"speedup={speedup:.2f}x batched={st.n_batched}/{n} "
+                f"adm={pb.n_admitted}/{n} identical={identical} "
+                f"under_tick={under_tick}")
+        # Bit-identity is the contract, not an acceptance bar: the batched
+        # kernel must reproduce the sequential solve exactly, always.
+        assert identical, (
+            f"S7: batched DP diverged from sequential at N={n}")
+        out[f"N{n}"] = {"requests": n,
+                        "sequential_solve_s": min(seq_s),
+                        "batched_solve_s": min(bat_s),
+                        "batch_speedup": speedup,
+                        "n_batched": st.n_batched,
+                        "n_ladder_fallback": n - st.n_batched,
+                        "admitted": pb.n_admitted,
+                        "bit_identical": identical,
+                        "under_tick_budget": under_tick}
+    s7 = (out["N1024"]["batch_speedup"] >= (4.0 if quick else 5.0)
+          and out["N1024"]["under_tick_budget"])
+    csv.add("swarm/claims/S7_batched_dp",
+            out["N1024"]["batched_solve_s"] * 1e6,
+            f"speedup_N1024={out['N1024']['batch_speedup']:.2f}x "
+            f"speedup_N256={out['N256']['batch_speedup']:.2f}x "
+            f"identical={out['N1024']['bit_identical']} holds={s7}")
+    # quick keeps a noise-tolerant floor (shared CI runners); the full run
+    # pins the ≥ 5× acceptance bar, and the committed baseline speedup
+    # ratio is the strict cross-machine lock either way.
+    assert s7, (f"S7: batched DP speedup "
+                f"{out['N1024']['batch_speedup']:.2f}x at N=1024 below the "
+                f"bar (under_tick={out['N1024']['under_tick_budget']})")
     return out
 
 
@@ -370,6 +448,9 @@ def run(csv: Csv, quick: bool = False, planners=None) -> dict:
     # --- S6: queueing runtime under overload -------------------------------
     res["queue_kernel"] = _bench_queue_kernel(csv, quick)
     res["overload"] = _bench_overload(csv, quick)
+
+    # --- S7: batched jitted DP epoch solve ---------------------------------
+    res["batched_dp"] = _bench_batched_dp(csv, quick)
     return res
 
 

@@ -37,6 +37,14 @@ speedup at N ≥ 50).  Metrics are compared per kind:
 
 Schema drift (a metric added or removed) fails the gate: update the
 baseline deliberately with ``--update-baseline`` and commit the diff.
+
+``--summary-md PATH`` appends a per-metric verdict table (baseline vs
+current, class, verdict) in GitHub-flavoured markdown — CI points it at
+``$GITHUB_STEP_SUMMARY`` so a red gate is readable from the checks page.
+``--locks-only`` gates just the speedup-class locks present in both files:
+the nightly workflow compares the *full* run against the quick baseline,
+where exact metrics and schema legitimately differ but the machine-relative
+speedup ratios must still hold.
 """
 
 from __future__ import annotations
@@ -81,47 +89,117 @@ def metric_kind(path: str) -> str:
     return "exact"
 
 
-def compare(baseline: dict, fresh: dict,
-            time_tolerance: float = TIME_TOLERANCE) -> list[str]:
-    """All regressions between two flattened metric maps (empty = gate ok)."""
-    problems: list[str] = []
+def evaluate(baseline: dict, fresh: dict,
+             time_tolerance: float = TIME_TOLERANCE,
+             locks_only: bool = False) -> list[dict]:
+    """Judge every metric path; one row per path (dict with ``path``,
+    ``kind``, ``base``, ``new``, ``ok``, ``detail``).
+
+    ``locks_only`` gates only the speedup-class locks present in *both*
+    maps — the nightly mode, where the full (non ``--quick``) run is
+    compared against the quick baseline: exact/time metrics and schema
+    legitimately differ across modes, but the machine-relative speedup
+    ratios must still hold.
+    """
+    rows: list[dict] = []
     for path in sorted(set(baseline) | set(fresh)):
+        kind = metric_kind(path)
+        if locks_only and kind != "speedup":
+            continue
         if path not in fresh:
-            problems.append(f"missing metric {path} (baseline has it)")
+            if locks_only:
+                continue
+            rows.append({"path": path, "kind": kind,
+                         "base": baseline[path], "new": None, "ok": False,
+                         "detail": "missing (baseline has it)"})
             continue
         if path not in baseline:
-            problems.append(f"new metric {path} not in baseline "
-                            f"(run --update-baseline)")
+            if locks_only:
+                continue
+            rows.append({"path": path, "kind": kind, "base": None,
+                         "new": fresh[path], "ok": False,
+                         "detail": "new, not in baseline "
+                                   "(run --update-baseline)"})
             continue
         base, new = baseline[path], fresh[path]
-        kind = metric_kind(path)
+        row = {"path": path, "kind": kind, "base": base, "new": new,
+               "ok": True, "detail": ""}
+        rows.append(row)
         if kind == "info":          # presence-only: value is never gated
             continue
-        if isinstance(base, bool) or isinstance(new, bool) or \
-                isinstance(base, str) or isinstance(new, str):
+        numeric = (isinstance(base, (int, float)) and
+                   isinstance(new, (int, float)) and
+                   not isinstance(base, bool) and not isinstance(new, bool))
+        if not numeric:
             if base != new:
-                problems.append(f"{path}: {base!r} -> {new!r}")
-            continue
-        if not isinstance(base, (int, float)) or \
-                not isinstance(new, (int, float)):
-            if base != new:
-                problems.append(f"{path}: {base!r} -> {new!r}")
-            continue
-        if kind == "time":
+                row["ok"] = False
+                row["detail"] = f"{base!r} -> {new!r}"
+        elif kind == "time":
             if new > base * time_tolerance:
-                problems.append(
-                    f"{path}: {new:.6g}s > {time_tolerance:.2f}x baseline "
-                    f"{base:.6g}s")
+                row["ok"] = False
+                row["detail"] = (f"{new:.6g}s > {time_tolerance:.2f}x "
+                                 f"baseline {base:.6g}s")
         elif kind == "speedup":
             if new < base * SPEEDUP_FLOOR:
-                problems.append(
-                    f"{path}: speedup {new:.3g}x < {SPEEDUP_FLOOR:.2f}x "
-                    f"baseline {base:.3g}x")
+                row["ok"] = False
+                row["detail"] = (f"speedup {new:.3g}x < "
+                                 f"{SPEEDUP_FLOOR:.2f}x baseline "
+                                 f"{base:.3g}x")
         else:
             if abs(new - base) > EXACT_REL_TOL * max(1.0, abs(base)):
-                problems.append(f"{path}: {base!r} -> {new!r} "
-                                f"(deterministic metric moved)")
-    return problems
+                row["ok"] = False
+                row["detail"] = (f"{base!r} -> {new!r} "
+                                 f"(deterministic metric moved)")
+    return rows
+
+
+def compare(baseline: dict, fresh: dict,
+            time_tolerance: float = TIME_TOLERANCE,
+            locks_only: bool = False) -> list[str]:
+    """All regressions between two flattened metric maps (empty = gate ok)."""
+    return [f"{r['path']}: {r['detail']}"
+            for r in evaluate(baseline, fresh, time_tolerance, locks_only)
+            if not r["ok"]]
+
+
+def _fmt(val: object) -> str:
+    if isinstance(val, bool) or not isinstance(val, (int, float)):
+        return repr(val)
+    if isinstance(val, int):
+        return str(val)
+    return f"{val:.6g}"
+
+
+def write_summary_md(rows: list[dict], path: pathlib.Path,
+                     title: str = "Benchmark regression gate") -> None:
+    """Append a per-metric verdict table (GitHub-flavoured markdown) —
+    pointed at ``$GITHUB_STEP_SUMMARY`` this makes a gate failure readable
+    from the PR checks page instead of a raw traceback.  Failures lead;
+    the full table is collapsed behind ``<details>``.
+    """
+    failed = [r for r in rows if not r["ok"]]
+    gated = [r for r in rows if r["kind"] != "info"]
+    head = "| metric | class | baseline | current | verdict |\n|---|---|---|---|---|\n"
+
+    def table(rs: list[dict]) -> str:
+        return head + "\n".join(
+            f"| `{r['path']}` | {r['kind']} | {_fmt(r['base'])} "
+            f"| {_fmt(r['new'])} "
+            f"| {'✅ ok' if r['ok'] else '❌ ' + r['detail']} |"
+            for r in rs) + "\n"
+
+    lines = [f"## {title}\n",
+             f"**{'❌ FAILED' if failed else '✅ ok'}** — "
+             f"{len(rows)} metrics ({len(gated)} gated, "
+             f"{len(rows) - len(gated)} info-only), "
+             f"{len(failed)} regression(s)\n"]
+    if failed:
+        lines.append(table(failed))
+    lines.append("<details><summary>all metrics</summary>\n")
+    lines.append(table(rows))
+    lines.append("</details>\n")
+    with path.open("a") as fh:
+        fh.write("\n".join(lines) + "\n")
 
 
 def main() -> None:
@@ -135,6 +213,13 @@ def main() -> None:
                          "(use a wider factor on shared CI runners)")
     ap.add_argument("--update-baseline", action="store_true",
                     help="bless the fresh results as the new baseline")
+    ap.add_argument("--summary-md", type=pathlib.Path, default=None,
+                    help="append a per-metric markdown verdict table here "
+                         "(point at $GITHUB_STEP_SUMMARY in CI)")
+    ap.add_argument("--locks-only", action="store_true",
+                    help="gate only speedup-class locks present in both "
+                         "baseline and results (nightly: full run vs the "
+                         "quick baseline — schema/exact drift is expected)")
     args = ap.parse_args()
 
     results = json.loads(args.results.read_text())
@@ -151,8 +236,15 @@ def main() -> None:
         return
 
     baseline = json.loads(args.baseline.read_text())
-    problems = compare(flatten(baseline), flatten(results),
-                       time_tolerance=args.time_tolerance)
+    rows = evaluate(flatten(baseline), flatten(results),
+                    time_tolerance=args.time_tolerance,
+                    locks_only=args.locks_only)
+    if args.summary_md is not None:
+        title = ("Benchmark regression gate"
+                 + (" (speedup locks only)" if args.locks_only else ""))
+        write_summary_md(rows, args.summary_md, title=title)
+    problems = [f"{r['path']}: {r['detail']}" for r in rows if not r["ok"]]
+    what = "speedup locks" if args.locks_only else "metrics"
     if problems:
         print(f"benchmark regression gate FAILED ({len(problems)}):")
         for p in problems:
@@ -161,7 +253,7 @@ def main() -> None:
               "--update-baseline && commit the baseline diff")
         sys.exit(1)
     print(f"benchmark regression gate ok "
-          f"({len(flatten(results))} metrics vs {args.baseline.name})")
+          f"({len(rows)} {what} vs {args.baseline.name})")
 
 
 if __name__ == "__main__":

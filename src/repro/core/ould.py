@@ -45,6 +45,13 @@ Solvers
   seed-pinned property (checked by bench_swarm S5 and the equivalence
   tests), not a structural guarantee.
   This is the ROADMAP's N ≥ 50 swarm regime (bench_swarm S5).
+  With ``batch_solve=True`` the per-request (M-1, k, k) min-plus sweeps of
+  one solve are precomputed in a single jitted JAX dispatch
+  (:mod:`repro.core.batch_dp`) and consumed greedily under a certification
+  rule that keeps every admission decision — and every admitted path —
+  bit-identical to the sequential sparse solve; requests the batched pass
+  cannot certify or admit fall back to the sequential ladder (bench_swarm
+  S7 locks the N = 1024 epoch re-solve speedup).
 
 OULD-MP is the same formulation with rate coefficients summed over the
 predicted horizon: cost(i,k) uses Σ_t 1/ρ_{i,k}(t) (Eq. 14).  A pair that is
@@ -407,7 +414,7 @@ class _SparseCounters:
     """Mutable tally of what the sparse ladder actually did (one solve)."""
 
     __slots__ = ("n_runs", "n_scanned", "n_dense_equiv", "n_escalations",
-                 "n_dense_fallback")
+                 "n_dense_fallback", "n_batched")
 
     def __init__(self):
         self.n_runs = 0             # DP kernel invocations (incl. repairs)
@@ -415,6 +422,7 @@ class _SparseCounters:
         self.n_dense_equiv = 0      # what the dense kernel would have scanned
         self.n_escalations = 0      # k-doubling retries
         self.n_dense_fallback = 0   # requests that hit the dense last resort
+        self.n_batched = 0          # requests served by the batched fast path
 
     def wrap(self, kernel: Callable, per_run: int, dense_per_run: int):
         """Instrument ``kernel`` so every invocation (the repair loop re-runs
@@ -499,6 +507,36 @@ def _sparse_select(spb: np.ndarray, src: int, mem_left: np.ndarray,
     else:
         cand = np.broadcast_to(np.arange(N), (M, N))
     valid = feas[np.arange(M)[:, None], cand]               # (M, kk)
+    return cand, valid
+
+
+def _sparse_select_batch(spb: np.ndarray, srcs: np.ndarray,
+                         mem_left: np.ndarray, comp_left: np.ndarray,
+                         head: np.ndarray, consts: tuple, k: int
+                         ) -> tuple[np.ndarray, np.ndarray]:
+    """Vectorized :func:`_sparse_select` over S sources at once.
+
+    Produces per source *exactly* the arrays the scalar selection produces —
+    the feasibility mask is source-independent (computed once instead of S
+    times), the score differs per source only through its ``spb`` row, and
+    ``np.argpartition``/``sort`` act on each (source, layer) slice
+    independently, so the (S, M, k) result rows are elementwise identical to
+    S scalar calls.  This is what makes one batch dispatch's selection cost
+    O(S + M·N) Python-side instead of S × O(M·N).
+    """
+    _, mem_a, comp_a, inv_scale = consts
+    N, M = spb.shape[0], mem_a.shape[0]
+    kk = int(min(k, N))
+    feas = ((mem_left[None, :] >= mem_a[:, None])
+            & (comp_left[None, :] >= comp_a[:, None]))      # (M, N)
+    score = spb[srcs] * inv_scale - 1e-3 * head[None, :]    # (S, N)
+    masked = np.where(feas[None], score[:, None, :], np.inf)  # (S, M, N)
+    if kk < N:
+        cand = np.argpartition(masked, kk - 1, axis=2)[:, :, :kk]
+        cand.sort(axis=2)
+    else:
+        cand = np.broadcast_to(np.arange(N), (len(srcs), M, N)).copy()
+    valid = feas[np.arange(M)[None, :, None], cand]         # (S, M, kk)
     return cand, valid
 
 
@@ -798,6 +836,200 @@ class _SparsePlacer:
         return result
 
 
+def _fits_joint(path: np.ndarray, mem: list[float], comp: list[float],
+                mem_left: np.ndarray, comp_left: np.ndarray) -> bool:
+    """Path-local equivalent of :func:`_repair_capacity`: a path loads at
+    most M distinct nodes, so only those need the joint residual check —
+    O(M) instead of the O(N) full-array scan (the batched fast path's
+    per-request cost must not scale with swarm size)."""
+    m_use: dict[int, float] = {}
+    c_use: dict[int, float] = {}
+    for j, i in enumerate(path):
+        i = int(i)
+        m_use[i] = m_use.get(i, 0.0) + mem[j]
+        c_use[i] = c_use.get(i, 0.0) + comp[j]
+    return all(m_use[i] <= mem_left[i] + 1e-9
+               and c_use[i] <= comp_left[i] + 1e-9 for i in m_use)
+
+
+def _place_batch(placer: _SparsePlacer,
+                 sources: list[int]) -> list[tuple[np.ndarray | None, float]]:
+    """Greedy sequential placement with the batched kernel fast path.
+
+    Returns per-request ``(path, cost)`` — ``(None, inf)`` for rejections —
+    with commits applied, such that decisions (admission AND paths) are
+    bit-identical to calling ``placer.place(src)`` + bar check + commit per
+    request in order.
+
+    One jitted dispatch (:func:`repro.core.batch_dp.solve_batch`) precomputes
+    the base-ladder-level DP of every *distinct* pending source against the
+    current residuals.  A request may consume its precomputed row only while
+    **certified**: the feasibility epoch is unchanged since the dispatch, so
+    candidate selection is provably identical (selection reads the residuals
+    only through the feasibility bits — unflipped — and the headroom
+    tiebreak frozen per epoch: the :class:`_SparsePlacer` certification
+    argument).  A certified row is accepted exactly when the sequential base
+    stage would have been (finite cost, under the admission bar, joint
+    residual fit); a non-accepted row — no finite path, too dear, fit
+    failure — falls back to ``placer.place``'s full ladder against the
+    current residuals, just as the sequential solve escalates.  When a
+    commit *does* bump the epoch, the remaining requests are re-batched in
+    one fresh dispatch rather than de-certifying one by one: per bump that
+    costs |distinct sources| selections + one kernel call, where the
+    sequential path pays a selection per request.
+
+    Between dispatches the fast path never touches numpy: residual updates
+    live in Python *shadow dicts* overlaid on ``placer.mem_left`` /
+    ``comp_left`` (Python floats are IEEE doubles, so the per-layer
+    subtraction fold is bit-identical to the numpy scalar loop in
+    :meth:`_SparsePlacer.commit`), and the epoch-flip test is two ``bisect``
+    calls per touched node against the sorted per-layer requirement
+    thresholds — the count of thresholds ≤ residual determines that node's
+    feasibility bits exactly, so equal counts on both resources certify "no
+    bit flipped" without building the (M, |cols|) bit arrays.  A *possible*
+    flip defers to ``placer.commit`` (after flushing the shadows), which
+    performs the exact joint-bit comparison and the epoch bump.
+    """
+    from bisect import bisect_right
+
+    from . import batch_dp
+
+    counters = placer.counters
+    mem_l, comp_l = placer.mem, placer.comp          # per-layer demands
+    mem_left, comp_left = placer.mem_left, placer.comp_left
+    mem_ts = sorted(float(x) for x in placer._mem_a)   # bit-pattern keys:
+    comp_ts = sorted(float(x) for x in placer._comp_a)  # count(ts <= res)
+    max_cost = placer.max_path_cost
+    R = len(sources)
+    out: list[tuple[np.ndarray | None, float]] = []
+    i = 0
+    top_m, top_c = None, None
+    while i < R:
+        # Batch the distinct sources still pending at the current residuals.
+        uniq: list[int] = []
+        row_of: dict[int, int] = {}
+        for s in sources[i:]:
+            if s not in row_of:
+                row_of[s] = len(uniq)
+                uniq.append(s)
+        cand, valid = _sparse_select_batch(placer.spb,
+                                           np.asarray(uniq, np.int64),
+                                           placer.mem_left, placer.comp_left,
+                                           placer._head, placer.consts,
+                                           placer.k)
+        paths0, costs0 = batch_dp.solve_batch(
+            placer.spb, placer.Ks, placer.compute_cost,
+            np.asarray(uniq, np.int64), cand, valid, placer.consts)
+        batch_epoch = placer._epoch
+        if counters is not None:
+            _, M, kk = cand.shape
+            N = placer.spb.shape[0]
+            counters.n_runs += len(uniq)
+            counters.n_scanned += len(uniq) * (M - 1) * kk * kk
+            counters.n_dense_equiv += len(uniq) * (M - 1) * N * N
+        # Per-row precomputation shared by every request on the row: the
+        # layer-by-layer demand sequence (the commit fold) and the per-node
+        # aggregated demand in first-visit order (the _fits_joint fold).
+        row_bad, row_layers, row_agg, row_out = [], [], [], []
+        for q in range(len(uniq)):
+            p = paths0[q]
+            bad = (p is None or costs0[q] >= _BIG
+                   or (max_cost is not None and costs0[q] > max_cost))
+            row_bad.append(bad)
+            if bad:
+                row_layers.append(None)
+                row_agg.append(None)
+                row_out.append(None)
+                continue
+            pl = p.tolist()
+            row_layers.append(list(zip(pl, mem_l, comp_l)))
+            agg: dict[int, list[float]] = {}
+            for j, node in enumerate(pl):
+                a = agg.get(node)
+                if a is None:
+                    agg[node] = [mem_l[j], comp_l[j]]
+                else:
+                    a[0] += mem_l[j]
+                    a[1] += comp_l[j]
+            row_agg.append([(n, a[0], a[1]) for n, a in agg.items()])
+            row_out.append((p, float(costs0[q])))
+        if top_m is None:
+            top_m, top_c = mem_ts[-1], comp_ts[-1]
+        sh_m: dict[int, float] = {}      # shadow residuals (node → value);
+        sh_c: dict[int, float] = {}      # truth overlay on mem/comp_left
+
+        def flush():
+            if sh_m:
+                ks = list(sh_m)
+                mem_left[ks] = [sh_m[n] for n in ks]
+                comp_left[ks] = [sh_c[n] for n in ks]
+                sh_m.clear()
+                sh_c.clear()
+
+        while i < R:
+            if placer._epoch != batch_epoch:
+                break                       # stale rows: re-batch the rest
+            q = row_of[sources[i]]
+            if not row_bad[q]:
+                # Joint fit (== _fits_joint) against the shadowed residuals.
+                olds = []
+                ok = True
+                for node, um, uc in row_agg[q]:
+                    om = sh_m.get(node)
+                    if om is None:
+                        om = float(mem_left[node])
+                        oc = float(comp_left[node])
+                    else:
+                        oc = sh_c[node]
+                    olds.append((node, om, oc))
+                    if um > om + 1e-9 or uc > oc + 1e-9:
+                        ok = False
+                        break
+                if ok:
+                    # Commit: per-layer subtraction in path order (the exact
+                    # fold _SparsePlacer.commit performs).
+                    cur_m = {n: om for n, om, _ in olds}
+                    cur_c = {n: oc for n, _, oc in olds}
+                    for node, mj, cj in row_layers[q]:
+                        cur_m[node] -= mj
+                        cur_c[node] -= cj
+                    flip = False
+                    for node, om, oc in olds:
+                        nm, nc = cur_m[node], cur_c[node]
+                        # Demands only shrink residuals: new ≥ top ⇒ old ≥
+                        # top ⇒ every bit stays set — skip the bisects.
+                        if ((nm < top_m and bisect_right(mem_ts, nm)
+                                != bisect_right(mem_ts, om))
+                                or (nc < top_c and bisect_right(comp_ts, nc)
+                                    != bisect_right(comp_ts, oc))):
+                            flip = True
+                            break
+                    if flip:
+                        # A bit may have flipped: take the exact path.
+                        flush()
+                        placer.commit(paths0[q])
+                    else:
+                        sh_m.update(cur_m)
+                        sh_c.update(cur_c)
+                    if counters is not None:
+                        counters.n_batched += 1
+                    out.append(row_out[q])
+                    i += 1
+                    continue
+            # Row rejected (no finite path / too dear / fit failure): the
+            # sequential solve escalates the ladder from current residuals.
+            flush()
+            path, cost = placer.place(int(sources[i]))
+            if path is not None and (max_cost is None or cost <= max_cost):
+                placer.commit(path)
+                out.append((path, cost))
+            else:
+                out.append((None, float("inf")))
+            i += 1
+        flush()
+    return out
+
+
 def _path_cost(spb: np.ndarray, K: list[float], Ks: float, src: int,
                path: np.ndarray,
                compute_cost: np.ndarray | None = None) -> float:
@@ -887,7 +1119,7 @@ def placement_drift(prob: Problem, assign: np.ndarray, admitted: np.ndarray,
 
 def _solve_dp(prob: Problem, *, include_compute: bool,
               max_path_cost: float | None = None,
-              sparse_k: int | None = None
+              sparse_k: int | None = None, batch_solve: bool = False
               ) -> tuple[np.ndarray, float, np.ndarray, "ResolveStats | None"]:
     """Sequential greedy-DP: requests placed one at a time (exact per request,
     greedy across requests).  Returns (assign, total_comm_latency, admitted,
@@ -922,32 +1154,43 @@ def _solve_dp(prob: Problem, *, include_compute: bool,
                                mem_left, comp_left, compute_cost,
                                k=sparse_k, max_path_cost=max_path_cost,
                                counters=counters)
-    for r in range(R):
-        if placer is not None:
-            path, cost = placer.place(int(prob.sources[r]))
-        else:
-            path, cost = _place_request(
-                spb, K, prob.profile.input_bytes, int(prob.sources[r]),
-                mem, comp, mem_left, comp_left, compute_cost)
-        if path is None or (max_path_cost is not None and cost > max_path_cost):
-            admitted[r] = False
-            continue
-        if placer is not None:
-            placer.commit(path)
-        else:
-            for j, i in enumerate(path):
-                mem_left[i] -= mem[j]
-                comp_left[i] -= comp[j]
-        assign[r] = path
-        admitted[r] = True
-        total += cost
+    if placer is not None and batch_solve and R > 0:
+        for r, (path, cost) in enumerate(
+                _place_batch(placer, [int(s) for s in prob.sources])):
+            if path is None:
+                continue
+            assign[r] = path
+            admitted[r] = True
+            total += cost
+    else:
+        for r in range(R):
+            if placer is not None:
+                path, cost = placer.place(int(prob.sources[r]))
+            else:
+                path, cost = _place_request(
+                    spb, K, prob.profile.input_bytes, int(prob.sources[r]),
+                    mem, comp, mem_left, comp_left, compute_cost)
+            if path is None or (max_path_cost is not None
+                                and cost > max_path_cost):
+                admitted[r] = False
+                continue
+            if placer is not None:
+                placer.commit(path)
+            else:
+                for j, i in enumerate(path):
+                    mem_left[i] -= mem[j]
+                    comp_left[i] -= comp[j]
+            assign[r] = path
+            admitted[r] = True
+            total += cost
     stats = None
     if counters is not None:
         stats = ResolveStats(0, R, N, True, time.perf_counter() - t0,
                              k=int(sparse_k),
                              n_dense_fallback=counters.n_dense_fallback,
                              n_escalations=counters.n_escalations,
-                             pruned_fraction=counters.pruned_fraction)
+                             pruned_fraction=counters.pruned_fraction,
+                             n_batched=counters.n_batched)
     return assign, total, admitted, stats
 
 
@@ -961,7 +1204,8 @@ def solve_ould(prob: Problem, *, solver: Solver = "ilp",
                mip_rel_gap: float = 1e-6,
                constraint_cache: dict | None = None,
                max_path_cost: float | None = None,
-               sparse_k: int | None = None) -> Solution:
+               sparse_k: int | None = None,
+               batch_solve: bool = False) -> Solution:
     """Solve an OULD / OULD-MP instance.
 
     Legacy entry point (kept for one release): new code goes through the
@@ -979,6 +1223,10 @@ def solve_ould(prob: Problem, *, solver: Solver = "ilp",
 
     ``sparse_k`` is the per-layer candidate budget of the ``"dp-sparse"``
     solver (None ⇒ :func:`default_sparse_k`); ignored by the other solvers.
+    ``batch_solve=True`` runs the ``"dp-sparse"`` request loop through the
+    batched jitted kernel (:mod:`repro.core.batch_dp`) — one dispatch per
+    solve, decisions bit-identical to the sequential pass; ignored by the
+    other solvers.
     """
     t0 = time.perf_counter()
     R = prob.n_requests
@@ -988,7 +1236,8 @@ def solve_ould(prob: Problem, *, solver: Solver = "ilp",
             k = sparse_k if sparse_k is not None else default_sparse_k(prob.n_nodes)
         assign, obj, admitted, stats = _solve_dp(
             prob, include_compute=include_compute,
-            max_path_cost=max_path_cost, sparse_k=k)
+            max_path_cost=max_path_cost, sparse_k=k,
+            batch_solve=batch_solve)
         n_rej = int(prob.n_requests - admitted.sum())
         status = "feasible" if n_rej == 0 else f"rejected:{n_rej}"
         return Solution(assign, obj, status, time.perf_counter() - t0,
@@ -1036,6 +1285,10 @@ class ResolveStats:
     n_dense_fallback: int = 0   # requests that hit the dense last resort
     n_escalations: int = 0      # k-doubling retries across requests
     pruned_fraction: float = 0.0  # share of N² transition scans avoided
+    # Batched-kernel fast path (batch_solve=True): requests whose placement
+    # came certified out of the single jitted dispatch (the rest fell back
+    # to the sequential ladder).
+    n_batched: int = 0
 
 
 class IncrementalSolver:
@@ -1073,7 +1326,8 @@ class IncrementalSolver:
                  rel_change: float = 0.05, price_rel_change: float = 0.0,
                  max_path_cost: float | None = None,
                  rate_unit_bytes: float = 1 / 8.0,
-                 sparse_k: int | None = None, **ilp_kw):
+                 sparse_k: int | None = None, batch_solve: bool = False,
+                 **ilp_kw):
         self.profile = profile
         self.mem_cap = np.asarray(mem_cap, float)
         self.comp_cap = np.asarray(comp_cap, float)
@@ -1085,6 +1339,9 @@ class IncrementalSolver:
         # rule); the warm path re-places touched requests with the SAME
         # pruned kernel + fallback ladder as the cold sparse solve.
         self.sparse_k = sparse_k
+        # Epoch re-solves route the touched-request loop through the batched
+        # jitted kernel (decisions unchanged; dp-sparse only).
+        self.batch_solve = batch_solve
         # Entry re-pricing threshold for incremental_transfer_cost; 0.0 keeps
         # the cost matrix exact (only entries with *any* drift recomputed).
         # Must not exceed rel_change: _changed_nodes reads the incrementally
@@ -1207,6 +1464,7 @@ class IncrementalSolver:
                          constraint_cache=self.constraint_cache,
                          max_path_cost=self.max_path_cost,
                          sparse_k=self.sparse_k,
+                         batch_solve=self.batch_solve,
                          **self.ilp_kw)
         spb, n_repriced = self._priced_spb(prob)
         self._remember(spb, alive, request_ids, sol.assign, sol.admitted)
@@ -1217,7 +1475,8 @@ class IncrementalSolver:
             k=ds.k if ds else 0,
             n_dense_fallback=ds.n_dense_fallback if ds else 0,
             n_escalations=ds.n_escalations if ds else 0,
-            pruned_fraction=ds.pruned_fraction if ds else 0.0)
+            pruned_fraction=ds.pruned_fraction if ds else 0.0,
+            n_batched=ds.n_batched if ds else 0)
 
     def resolve(self, rates: np.ndarray, sources: np.ndarray,
                 request_ids=None,
@@ -1280,24 +1539,34 @@ class IncrementalSolver:
                                    comp_left, compute_cost, k=k,
                                    max_path_cost=self.max_path_cost,
                                    counters=counters)
-        for r in todo:
-            if placer is not None:
-                path, cost = placer.place(int(prob.sources[r]))
-            else:
-                path, cost = _place_request(spb, K, Ks, int(prob.sources[r]),
-                                            mem, comp, mem_left, comp_left,
-                                            compute_cost)
-            if path is None or (self.max_path_cost is not None
-                                and cost > self.max_path_cost):
-                continue
-            if placer is not None:
-                placer.commit(path)
-            else:
-                for j, i in enumerate(path):
-                    mem_left[i] -= mem[j]
-                    comp_left[i] -= comp[j]
-            assign[r] = path
-            admitted[r] = True
+        if placer is not None and self.batch_solve and todo:
+            placed = _place_batch(placer,
+                                  [int(prob.sources[r]) for r in todo])
+            for r, (path, cost) in zip(todo, placed):
+                if path is None:
+                    continue
+                assign[r] = path
+                admitted[r] = True
+        else:
+            for r in todo:
+                if placer is not None:
+                    path, cost = placer.place(int(prob.sources[r]))
+                else:
+                    path, cost = _place_request(spb, K, Ks,
+                                                int(prob.sources[r]),
+                                                mem, comp, mem_left,
+                                                comp_left, compute_cost)
+                if path is None or (self.max_path_cost is not None
+                                    and cost > self.max_path_cost):
+                    continue
+                if placer is not None:
+                    placer.commit(path)
+                else:
+                    for j, i in enumerate(path):
+                        mem_left[i] -= mem[j]
+                        comp_left[i] -= comp[j]
+                assign[r] = path
+                admitted[r] = True
         # Objective re-priced for EVERY admitted request — kept paths are not
         # assumed to still cost what they used to.  The spb is exact at
         # price_rel_change=0 (the default); otherwise entries may lag the
@@ -1316,4 +1585,5 @@ class IncrementalSolver:
             k=k,
             n_dense_fallback=counters.n_dense_fallback if counters else 0,
             n_escalations=counters.n_escalations if counters else 0,
-            pruned_fraction=counters.pruned_fraction if counters else 0.0)
+            pruned_fraction=counters.pruned_fraction if counters else 0.0,
+            n_batched=counters.n_batched if counters else 0)

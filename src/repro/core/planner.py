@@ -302,14 +302,15 @@ class OuldPlanner(_PlannerBase):
                  gamma_relaxed: bool = True, time_limit: float | None = None,
                  mip_rel_gap: float = 1e-6,
                  max_path_cost: float | None = None,
-                 sparse_k: int | None = None, **_ignored: Any):
+                 sparse_k: int | None = None, batch_solve: bool = False,
+                 **_ignored: Any):
         self.name = name or f"ould-{solver}"
         self.view_kinds = view_kinds
         self.solver = solver
         self._kw = dict(include_compute=include_compute, tight=tight,
                         gamma_relaxed=gamma_relaxed, time_limit=time_limit,
                         mip_rel_gap=mip_rel_gap, max_path_cost=max_path_cost,
-                        sparse_k=sparse_k)
+                        sparse_k=sparse_k, batch_solve=batch_solve)
         self._constraint_cache: dict = {}
 
     def plan(self, problem: Problem, view: TopologyView, *,
@@ -363,7 +364,8 @@ class IncrementalPlanner(_PlannerBase):
                  rel_change: float = 0.05, price_rel_change: float = 0.0,
                  max_path_cost: float | None = None,
                  include_compute: bool = False,
-                 sparse_k: int | None = None, **_ignored: Any):
+                 sparse_k: int | None = None, batch_solve: bool = False,
+                 **_ignored: Any):
         self.name = name
         if view_kinds is not None:
             self.view_kinds = view_kinds
@@ -374,6 +376,7 @@ class IncrementalPlanner(_PlannerBase):
         self.max_path_cost = max_path_cost
         self.include_compute = include_compute
         self.sparse_k = sparse_k
+        self.batch_solve = batch_solve
         self._inc: IncrementalSolver | None = None
         self._pool_key: tuple | None = None
 
@@ -391,7 +394,7 @@ class IncrementalPlanner(_PlannerBase):
                 price_rel_change=self.price_rel_change,
                 max_path_cost=self.max_path_cost,
                 rate_unit_bytes=problem.rate_unit_bytes,
-                sparse_k=self.sparse_k)
+                sparse_k=self.sparse_k, batch_solve=self.batch_solve)
             self._pool_key = key
         return self._inc
 

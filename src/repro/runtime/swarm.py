@@ -129,6 +129,9 @@ class SwarmScenario:
     rel_change: float = 0.05       # incremental-solver link-drift threshold
     max_path_cost_s: float = 1e6   # admission bar: reject _BIG-priced paths
     sparse_k: int | None = None    # k-candidate budget for *-sparse planners
+    # Epoch re-solves place all pending requests in one jitted batch-DP
+    # dispatch (core/batch_dp) — bit-identical admission, large-N speedup.
+    batch_solve: bool = False
     # Degraded-view axis (ROADMAP): what the planner sees vs what serves.
     # None ⇒ the planner's preferred fresh view; "stale:<ticks>" ⇒ snapshot /
     # horizon captured that many ticks ago (StaleView); "noisy:<std>" ⇒
@@ -297,6 +300,7 @@ class SimResult:
     # transport): realized bytes/s per sampled link, worker process pids.
     transport: str = "inproc"
     link_bytes_per_s: dict = dataclasses.field(default_factory=dict)
+    warm_starts: int = 0         # churn-rejoin warm_start invocations
 
     @property
     def deadline_miss_rate(self) -> float:
@@ -459,6 +463,8 @@ def _stage_measurer(scn: SwarmScenario, profile: ModelProfile, seed: int,
                 transport.ship(0, 1, act_at(layer_start))
         return cache[key]
 
+    measure.engine = engine     # exposed for churn-rejoin warm starts
+    measure.frame = frame
     return measure
 
 
@@ -582,7 +588,8 @@ class _Simulation:
                                         warm=not cold_resolves,
                                         rel_change=scn.rel_change,
                                         max_path_cost=scn.max_path_cost_s,
-                                        sparse_k=scn.sparse_k)
+                                        sparse_k=scn.sparse_k,
+                                        batch_solve=scn.batch_solve)
         self.wants_horizon = getattr(self.ctrl.planner, "preferred_view",
                                      "snapshot") == "horizon"
         self.degradation = _parse_degradation(scn.view_degradation)
@@ -594,6 +601,8 @@ class _Simulation:
         measure = (_stage_measurer(scn, profile, seed,
                                    transport=self.transport)
                    if scn.execute else None)
+        self.measure = measure
+        self.warm_starts = 0         # churn-rejoin warm_start invocations
         self.table = _PlacementTable(self.comp, self.speed, self.deadline_of,
                                      measure)
         self.queues = NodeQueues(scn.n_uavs,
@@ -742,6 +751,22 @@ class _Simulation:
         if finite.size:
             self._lat_chunks.append(finite)
 
+    def _warm_rejoin(self) -> None:
+        """Pre-compile the live plan's stage signature on churn rejoin.
+
+        A node that rejoins mid-scenario will be handed stages from the
+        next epoch's plan; the distinct ``(layer_start, layer_end)`` ranges
+        of the *current* placements are the best predictor of that
+        signature, and with the persistent compile cache enabled the
+        warm-up replays as disk hits — milliseconds, off the serving clock
+        (ExecutionEngine.warm_start; executed mode only)."""
+        if self.measure is None or not self.placed:
+            return
+        sig = {(st.layer_start, st.layer_end)
+               for path in self.placed.values() for st in to_stages(path)}
+        self.measure.engine.warm_start(sorted(sig), self.measure.frame[0])
+        self.warm_starts += 1
+
     # -- driver -------------------------------------------------------------
     def run(self) -> SimResult:
         try:
@@ -764,6 +789,7 @@ class _Simulation:
                 self.alive[ev.payload] = False
             elif ev.kind == EventKind.NODE_REJOIN:
                 self.alive[ev.payload] = True
+                self._warm_rejoin()
             elif ev.kind == EventKind.EPOCH:
                 self.on_epoch(int(round(ev.time / self.scn.tick_s)))
             elif ev.kind == EventKind.MOBILITY_TICK:
@@ -786,7 +812,8 @@ class _Simulation:
                          queue_demand_s=self.queues.demand_s.copy(),
                          transport=self.scn.transport if self.scn.execute
                          else "inproc",
-                         link_bytes_per_s=link_bw)
+                         link_bytes_per_s=link_bw,
+                         warm_starts=self.warm_starts)
 
 
 def simulate(scn: SwarmScenario, policy: str, seed: int = 0, *,

@@ -1,0 +1,258 @@
+"""Batched jitted DP kernel (``batch_solve=True``): bit-identity and the
+padding/bucketing contract.
+
+The contract under test (ISSUE 8 / DESIGN §8):
+* the batched epoch solve is bit-identical to the sequential
+  ``ould-dp-sparse`` request loop — admission, assignment AND objective —
+  on fixed seeds across sizes, including contended instances where the
+  fallback ladder handles every request the batched pass rejects;
+* ``_sparse_select_batch`` rows equal S scalar ``_sparse_select`` calls;
+* ``batch_dp.solve_batch`` equals per-row ``_sparse_run`` sweeps exactly;
+* the warm (``IncrementalSolver``) re-solve path composes with the batched
+  kernel and reproduces the sequential warm re-solve;
+* re-solving with a different request count only recompiles the kernel
+  when the padded row count crosses a power-of-two bucket boundary.
+"""
+
+import numpy as np
+import pytest
+
+from repro.core import (IncrementalSolver, Problem, SnapshotView, batch_dp,
+                        get_planner, lenet_profile, rate_matrix, solve_ould)
+from repro.core.mobility import RPGMobility, RPGParams
+from repro.core.ould import (_sparse_consts, _sparse_run, _sparse_select,
+                             _sparse_select_batch)
+from repro.core.profiles import LayerProfile, ModelProfile
+
+MB = 1e6
+
+
+def _swarm(n=50, requests=16, seed=0, area=300.0, mem_mb=512.0,
+           comp=95e9, hotspots=5):
+    mob = RPGMobility(RPGParams(n_uavs=n, area_m=area, homogeneous=True),
+                      seed=seed)
+    rates = rate_matrix(mob.positions(1, seed=seed)[0])
+    rng = np.random.default_rng(seed)
+    src = rng.integers(0, min(hotspots, n), requests).astype(np.int64)
+    return Problem(lenet_profile(), np.full(n, mem_mb * MB),
+                   np.full(n, comp), rates, src, np.full(n, 9.5e9))
+
+
+def _tight(n=12, requests=12, seed=0, mem_cap=30.0):
+    """Toy instance with real contention: repairs, spreads and rejections."""
+    prof = ModelProfile("toy", tuple(
+        LayerProfile(f"l{j}", 10.0, 1.0, [8.0, 4.0, 2.0, 1.0][j])
+        for j in range(4)), input_bytes=16.0)
+    rng = np.random.default_rng(seed)
+    pos = rng.uniform(0, 120, (n, 3))
+    pos[:, 2] = 50.0
+    src = rng.integers(0, n, requests).astype(np.int64)
+    return Problem(prof, np.full(n, mem_cap), np.full(n, 40.0),
+                   rate_matrix(pos), src)
+
+
+def _both(prob, **kw):
+    seq = solve_ould(prob, solver="dp-sparse", **kw)
+    bat = solve_ould(prob, solver="dp-sparse", batch_solve=True, **kw)
+    return seq, bat
+
+
+def _assert_identical(seq, bat):
+    np.testing.assert_array_equal(bat.admitted, seq.admitted)
+    np.testing.assert_array_equal(bat.assign, seq.assign)
+    assert bat.objective == seq.objective       # bitwise, not approx
+
+
+# ---------------------------------------------------------------------------
+# equivalence matrix: sequential loop vs batched epoch solve
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("seed", [0, 1, 2])
+@pytest.mark.parametrize("n", [8, 50, 256])
+def test_batched_equals_sequential_matrix(seed, n):
+    """Fixed seeds × sizes at the default k: admission, assignment and
+    objective are bit-identical, and the fast path actually engages."""
+    prob = _swarm(n=n, requests=max(8, n // 4), seed=seed, hotspots=5)
+    seq, bat = _both(prob)
+    _assert_identical(seq, bat)
+    assert bat.dp_stats.n_batched > 0
+    assert seq.dp_stats.n_batched == 0          # counter is batched-only
+
+
+def test_ladder_fallback_parity_under_contention():
+    """Contended toy instance at tiny k: the batched pass rejects every
+    request (joint-capacity repairs, k-escalations, dense fallback), the
+    sequential ladder takes over — and the solve is still bit-identical."""
+    for seed in range(3):
+        prob = _tight(seed=seed, mem_cap=30.0)
+        seq, bat = _both(prob, sparse_k=2, max_path_cost=1e6)
+        _assert_identical(seq, bat)
+        assert bat.dp_stats.n_batched == 0       # everything fell off
+        assert bat.dp_stats.n_dense_fallback > 0
+
+
+def test_mixed_batched_and_ladder_requests():
+    """Mid-contention: some requests commit through the certified batch
+    fast path, the rest fall to the ladder, within one solve."""
+    prob = _tight(mem_cap=60.0)
+    seq, bat = _both(prob, sparse_k=2, max_path_cost=1e6)
+    _assert_identical(seq, bat)
+    assert 0 < bat.dp_stats.n_batched < prob.n_requests
+
+
+def test_planner_threads_batch_solve():
+    prob = _swarm(n=50, requests=16)
+    view = SnapshotView(prob.rates)
+    seq = get_planner("ould-dp-sparse").plan(prob, view)
+    bat = get_planner("ould-dp-sparse", batch_solve=True).plan(prob, view)
+    np.testing.assert_array_equal(bat.admitted, seq.admitted)
+    np.testing.assert_array_equal(bat.assign, seq.assign)
+    assert bat.objective == seq.objective
+    assert bat.solve_stats.n_batched > 0
+
+
+# ---------------------------------------------------------------------------
+# component parity (white-box)
+# ---------------------------------------------------------------------------
+
+def _kernel_inputs(prob):
+    spb = prob.transfer_cost()
+    prof = prob.profile
+    consts = _sparse_consts(spb, prof.output_vector(),
+                            prof.memory_vector(), prof.compute_vector())
+    mem_left = prob.mem_cap.astype(float).copy()
+    comp_left = prob.comp_cap.astype(float).copy()
+    head = (mem_left / max(float(mem_left.max()), 1e-30)
+            + comp_left / max(float(comp_left.max()), 1e-30))
+    return spb, consts, mem_left, comp_left, head
+
+
+@pytest.mark.parametrize("seed", range(3))
+def test_select_batch_matches_scalar(seed):
+    prob = _swarm(n=40, requests=12, seed=seed)
+    spb, consts, mem_left, comp_left, head = _kernel_inputs(prob)
+    srcs = np.unique(prob.sources)
+    for k in (3, 6, 40):
+        cand_b, valid_b = _sparse_select_batch(spb, srcs, mem_left,
+                                               comp_left, head, consts, k)
+        for q, src in enumerate(srcs):
+            cand, valid = _sparse_select(spb, int(src), mem_left,
+                                         comp_left, head, consts, k)
+            np.testing.assert_array_equal(cand_b[q], cand)
+            np.testing.assert_array_equal(valid_b[q], valid)
+
+
+@pytest.mark.parametrize("seed", range(3))
+def test_solve_batch_matches_sparse_run_rows(seed):
+    """The jitted sweep vs the numpy reference on identical candidate
+    arrays: per-row paths equal, costs bitwise equal (f64 + same op order
+    + first-min argmin — DESIGN §8's bit-identity contract)."""
+    prob = _swarm(n=40, requests=12, seed=seed)
+    spb, consts, mem_left, comp_left, head = _kernel_inputs(prob)
+    prof = prob.profile
+    Ks = prof.input_bytes
+    srcs = np.unique(prob.sources)
+    cand, valid = _sparse_select_batch(spb, srcs, mem_left, comp_left,
+                                       head, consts, 6)
+    paths, costs = batch_dp.solve_batch(spb, Ks, None, srcs, cand, valid,
+                                        consts)
+    for q, src in enumerate(srcs):
+        ref_path, ref_cost = _sparse_run(spb, Ks, int(src), None, cand[q],
+                                         valid[q], consts)
+        if ref_path is None:
+            assert paths[q] is None and costs[q] == np.inf
+        else:
+            np.testing.assert_array_equal(paths[q], ref_path)
+            assert float(costs[q]) == ref_cost
+
+
+# ---------------------------------------------------------------------------
+# warm (IncrementalSolver) path
+# ---------------------------------------------------------------------------
+
+def test_warm_batched_resolve_matches_sequential_warm():
+    """Epoch re-solves under drift — the tentpole's serving shape: the
+    batched warm re-solve equals the sequential warm re-solve exactly."""
+    prob = _swarm(n=40, requests=16, seed=2, hotspots=3)
+    mob = RPGMobility(RPGParams(n_uavs=40, area_m=300.0, homogeneous=True),
+                      seed=2)
+    pos = mob.positions(40, seed=5)
+
+    def solver(batch):
+        # rel_change=0: any link drift re-places its requests, so every
+        # epoch actually exercises the batched re-solve loop.
+        s = IncrementalSolver(prob.profile, prob.mem_cap, prob.comp_cap,
+                              prob.compute_speed, solver="dp-sparse",
+                              rel_change=0.0, batch_solve=batch)
+        s.solve(prob.rates, prob.sources)
+        return s
+
+    seq, bat = solver(False), solver(True)
+    batched = replaced = 0
+    for t in (10, 25, 39):
+        drift = rate_matrix(pos[t])
+        ws, _ = seq.resolve(drift, prob.sources)
+        wb, stats = bat.resolve(drift, prob.sources)
+        np.testing.assert_array_equal(wb.admitted, ws.admitted)
+        np.testing.assert_array_equal(wb.assign, ws.assign)
+        assert wb.objective == ws.objective
+        batched += stats.n_batched
+        replaced += stats.n_replaced
+    assert replaced > 0          # the drift actually re-placed requests
+    assert batched > 0           # ... and they went through the batch path
+
+
+# ---------------------------------------------------------------------------
+# padding / bucketing contract
+# ---------------------------------------------------------------------------
+
+def test_bucket_rows():
+    assert batch_dp.bucket_rows(1) == batch_dp.MIN_BUCKET
+    assert batch_dp.bucket_rows(8) == 8
+    assert batch_dp.bucket_rows(9) == 16
+    assert batch_dp.bucket_rows(16) == 16
+    assert batch_dp.bucket_rows(1000) == 1024
+
+
+def test_recompile_only_on_bucket_crossing():
+    """Different request counts inside one padded bucket reuse the compiled
+    executable; crossing a power-of-two boundary compiles exactly once."""
+    prob = _swarm(n=30, requests=8, seed=0)
+    spb, consts, mem_left, comp_left, head = _kernel_inputs(prob)
+    Ks = prob.profile.input_bytes
+
+    def solve(n_rows):
+        srcs = np.arange(n_rows, dtype=np.int64) % 30
+        cand, valid = _sparse_select_batch(spb, srcs, mem_left, comp_left,
+                                           head, consts, 5)
+        batch_dp.solve_batch(spb, Ks, None, srcs, cand, valid, consts)
+
+    solve(3)                                     # bucket 8 (pads up)
+    base = batch_dp.compile_count()
+    assert base >= 1
+    solve(5)                                     # still bucket 8
+    solve(8)                                     # exactly at the boundary
+    assert batch_dp.compile_count() == base
+    solve(9)                                     # bucket 16: one recompile
+    assert batch_dp.compile_count() == base + 1
+    solve(16)                                    # same bucket again
+    assert batch_dp.compile_count() == base + 1
+
+
+def test_padded_rows_never_leak():
+    """S far from a bucket boundary: padded rows are dropped, real rows
+    match the scalar reference (the slice-back is exact)."""
+    prob = _swarm(n=30, requests=8, seed=1)
+    spb, consts, mem_left, comp_left, head = _kernel_inputs(prob)
+    Ks = prob.profile.input_bytes
+    srcs = np.array([0, 1, 2], np.int64)        # pads 3 -> 8 rows
+    cand, valid = _sparse_select_batch(spb, srcs, mem_left, comp_left,
+                                       head, consts, 4)
+    paths, costs = batch_dp.solve_batch(spb, Ks, None, srcs, cand, valid,
+                                        consts)
+    assert len(paths) == 3 and costs.shape == (3,)
+    for q, src in enumerate(srcs):
+        ref_path, ref_cost = _sparse_run(spb, Ks, int(src), None, cand[q],
+                                         valid[q], consts)
+        np.testing.assert_array_equal(paths[q], ref_path)
+        assert float(costs[q]) == ref_cost

@@ -562,3 +562,19 @@ def test_executed_loopback_transport_samples_substrate():
                       "incremental", seed=0)
     assert inproc.transport == "inproc" and inproc.link_bytes_per_s == {}
     assert inproc.served == r.served
+
+
+def test_churn_rejoin_fires_warm_start_in_executed_mode():
+    """NODE_REJOIN in executed mode pre-compiles the live plan's stage
+    signature (ExecutionEngine.warm_start) before the next epoch's plan
+    lands; the analytic twin of the same tape never warm-starts, and the
+    side effect is compile-cache-only — serving stays tape-identical."""
+    import dataclasses
+    scn = dataclasses.replace(SMALL, mtbf_s=40.0, mttr_s=10.0,
+                              execute=True)
+    r = simulate(scn, "incremental", seed=3)
+    assert r.warm_starts >= 1, "no rejoin warmed the execution engine"
+    analytic = simulate(dataclasses.replace(scn, execute=False),
+                        "incremental", seed=3)
+    assert analytic.warm_starts == 0
+    assert analytic.served == r.served
