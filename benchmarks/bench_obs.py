@@ -1,0 +1,197 @@
+"""Observability layer (repro.obs): tracing overhead + audited trace export.
+
+Claims:
+  T1  tracing is free when off and cheap when on: the default NullTracer
+      path is bit-identical to the untraced simulator (hard assert on the
+      S6 overload tape), and flight-recorder-on overhead stays < 10% of the
+      untraced wall (soft bar — the ratio is committed as a report-only
+      ``_info`` metric, a breach prints a warning instead of failing CI);
+  T1a the exported Chrome trace is *audited*: per-frame span algebra
+      ``frame.dur == base + queue_wait.dur + service.dur`` holds for every
+      completion, and trace-event conservation matches SimResult exactly
+      (served == outage instants + frame spans + drop instants + queue
+      reject instants) — the per-frame reconstruction from the Lindley
+      kernel outputs loses nothing.
+
+Artifacts: ``trace_overload_{quick,full}.json`` (the audited S6 overload
+trace, Perfetto-loadable — CI uploads the quick one, nightly the full ones)
+and, in full mode, ``trace_s7_full.json`` — the batched-DP epoch solve
+(S7) traced through the AdmissionController, whose solver spans carry the
+``cold_dispatch`` / ``n_jit_compiles`` args that keep first-dispatch XLA
+compile time from being misread as solve cost.
+"""
+
+from __future__ import annotations
+
+import pathlib
+import time
+
+import numpy as np
+
+from repro.obs import NullTracer, Tracer
+from repro.runtime.swarm import simulate
+
+from .bench_swarm import OVERLOAD
+from .common import Csv
+
+ARTIFACTS = pathlib.Path(__file__).resolve().parent / "artifacts"
+
+# Holds the whole overload trace (~3.4e5 events) without ring wraps, so the
+# conservation audit counts every event.  Flight-recorder (smaller ring,
+# newest events survive) is exercised by the unit tests, not here.
+AUDIT_CAPACITY = 1 << 20
+
+SOFT_OVERHEAD_BAR = 1.10
+
+
+def _timed(fn, reps: int):
+    best, res = float("inf"), None
+    for _ in range(max(1, reps)):        # min-of-N: noise robust
+        t0 = time.perf_counter()
+        res = fn()
+        best = min(best, time.perf_counter() - t0)
+    return best, res
+
+
+def _bench_overhead(csv: Csv, quick: bool) -> tuple[dict, Tracer]:
+    """T1: traced-off vs NullTracer vs ring-buffer-on, one shared tape."""
+    reps = 3 if quick else 5
+    simulate(OVERLOAD, "nearest", seed=0)   # warm XLA before any timing
+    off_s, r_off = _timed(lambda: simulate(OVERLOAD, "nearest", seed=0),
+                          reps)
+    null_s, r_null = _timed(
+        lambda: simulate(OVERLOAD, "nearest", seed=0, tracer=NullTracer()),
+        reps)
+    # Construct each rep's tracer outside the timed window: ring allocation
+    # is a once-per-process cost, not hot-path overhead (tracer.py pre-
+    # faults the columns for the same reason).
+    ring_s = float("inf")
+    tracer: Tracer | None = None
+    r_ring = None
+    for _ in range(max(1, reps)):
+        tr = Tracer(AUDIT_CAPACITY)
+        t0 = time.perf_counter()
+        r = simulate(OVERLOAD, "nearest", seed=0, tracer=tr)
+        ring_s = min(ring_s, time.perf_counter() - t0)
+        tracer, r_ring = tr, r
+
+    identical = bool(
+        r_off.served == r_null.served == r_ring.served
+        and np.array_equal(r_off.latencies, r_null.latencies)
+        and np.array_equal(r_off.latencies, r_ring.latencies)
+        and (r_off.missed, r_off.outages, r_off.dropped,
+             r_off.frames_rejected)
+        == (r_ring.missed, r_ring.outages, r_ring.dropped,
+            r_ring.frames_rejected))
+    null_x = null_s / max(off_s, 1e-12)
+    ring_x = ring_s / max(off_s, 1e-12)
+    under_bar = ring_x < SOFT_OVERHEAD_BAR
+    csv.add("obs/claims/T1_overhead", ring_s * 1e6,
+            f"off={off_s * 1e6:.0f}us null_x={null_x:.3f} "
+            f"ring_x={ring_x:.3f} events={tracer.n_events} "
+            f"bit_identical={identical} under_10pct={under_bar}")
+    assert identical, (
+        "T1: tracing must never perturb the simulation "
+        f"(served {r_off.served}/{r_null.served}/{r_ring.served})")
+    if not under_bar:                    # soft bar: report, don't fail
+        print(f"# WARNING obs/T1: ring-buffer tracing overhead "
+              f"{ring_x:.3f}x exceeds the {SOFT_OVERHEAD_BAR:.2f}x soft bar")
+    res = {"traced_off_s_info": off_s, "null_tracer_s_info": null_s,
+           "ring_on_s_info": ring_s, "null_overhead_x_info": null_x,
+           "ring_overhead_x_info": ring_x,
+           "ring_under_10pct_info": bool(under_bar),
+           "bit_identical": identical,
+           "n_events": int(tracer.n_events),
+           "n_ring_dropped": int(tracer.n_dropped)}
+    return res, (tracer, r_ring)
+
+
+def _audit_trace(csv: Csv, tracer: Tracer, r) -> dict:
+    """T1a: span algebra + event conservation against SimResult."""
+    f = tracer.select("frame")
+    w = tracer.select("queue_wait")
+    s = tracer.select("service")
+    n_out = int(tracer.select("outage")["ts"].size)
+    n_drop = int(tracer.select("drop")["ts"].size)
+    n_rej = int(tracer.select("reject_queue")["ts"].size)
+
+    aligned = bool(np.array_equal(f["frame"], w["frame"])
+                   and np.array_equal(f["frame"], s["frame"]))
+    algebra = aligned and bool(
+        np.allclose(f["dur"], f["a0"] + w["dur"] + s["dur"]))
+    conserved = bool(
+        f["ts"].size == r.latencies.size
+        and n_out == r.outages and n_drop == r.dropped
+        and n_rej == r.frames_rejected
+        and r.served == n_out + f["ts"].size + n_drop + n_rej)
+    csv.add("obs/claims/T1a_trace_audit", 0.0,
+            f"frames={f['ts'].size} outages={n_out} drops={n_drop} "
+            f"rejects={n_rej} algebra={algebra} conserved={conserved}")
+    assert algebra, "T1a: base + wait + service != frame latency"
+    assert conserved, (
+        f"T1a: trace events lost frames: served={r.served} vs "
+        f"{n_out} + {f['ts'].size} + {n_drop} + {n_rej}")
+    return {"frame_spans": int(f["ts"].size), "outage_events": n_out,
+            "drop_events": n_drop, "reject_events": n_rej,
+            "span_algebra_holds": algebra, "conservation_holds": conserved}
+
+
+def _export_overload_trace(csv: Csv, tracer: Tracer, quick: bool) -> dict:
+    ARTIFACTS.mkdir(parents=True, exist_ok=True)
+    path = ARTIFACTS / ("trace_overload_quick.json" if quick
+                        else "trace_overload_full.json")
+    n = tracer.export_chrome(path)
+    csv.add("obs/trace_export", 0.0,
+            f"events={n} dropped={tracer.n_dropped} path={path.name}")
+    return {"chrome_events": int(n), "path_info": str(path)}
+
+
+def _export_s7_trace(csv: Csv) -> dict:
+    """Nightly artifact: the S7 batched-DP epoch solve, traced through the
+    controller — its solver spans carry cold_dispatch/n_jit_compiles, the
+    fix that separates first-dispatch XLA compile time from solve cost."""
+    from repro.core import SnapshotView
+    from repro.runtime.serve import AdmissionController
+
+    from .common import HIGH_MEM, snapshot_problem
+
+    tracer = Tracer(1 << 16)
+    prob = snapshot_problem("lenet", 256, 256, mem=8 * HIGH_MEM,
+                            area=300.0, seed=0, hotspots=32)
+    ctrl = AdmissionController("ould-dp-sparse", tracer=tracer,
+                               batch_solve=True)
+    view = SnapshotView(prob.rates)
+    ctrl.admit(prob, view, request_ids=list(range(prob.n_requests)))
+    ctrl.admit(prob, view, request_ids=list(range(prob.n_requests)))
+    path = ARTIFACTS / "trace_s7_full.json"
+    n = tracer.export_chrome(path)
+    solves = tracer.select("solve")
+    csv.add("obs/trace_export_s7", 0.0,
+            f"events={n} solver_spans={solves['ts'].size} path={path.name}")
+    return {"chrome_events": int(n),
+            "solver_spans": int(solves["ts"].size),
+            "path_info": str(path)}
+
+
+def run(csv: Csv, quick: bool = False) -> dict:
+    res: dict = {}
+    res["t1_overhead"], (tracer, r_ring) = _bench_overhead(csv, quick)
+    res["audit"] = _audit_trace(csv, tracer, r_ring)
+    res["export"] = _export_overload_trace(csv, tracer, quick)
+    if not quick:
+        res["export_s7"] = _export_s7_trace(csv)
+    return res
+
+
+def main() -> None:
+    import argparse
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true")
+    args = ap.parse_args()
+    csv = Csv()
+    print("name,us_per_call,derived")
+    run(csv, quick=args.quick)
+
+
+if __name__ == "__main__":
+    main()

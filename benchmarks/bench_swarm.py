@@ -402,10 +402,12 @@ def run(csv: Csv, quick: bool = False, planners=None) -> dict:
                 f"miss={r.deadline_miss_rate:.3f} "
                 f"(deadline={r.over_deadline_miss_rate:.3f} "
                 f"outage={r.outage_rate:.3f}) rej={r.rejection_rate:.3f} "
-                f"lat={r.avg_latency_s:.3f}s served={r.served}")
+                f"lat={r.avg_latency_s:.3f}s served={r.served} "
+                f"warm_starts={r.warm_starts}")
         res[pol] = {"miss": r.deadline_miss_rate, "rej": r.rejection_rate,
                     "lat": r.avg_latency_s, "outages": r.outages,
-                    "over_deadline_miss": r.over_deadline_miss_rate}
+                    "over_deadline_miss": r.over_deadline_miss_rate,
+                    "warm_starts": r.warm_starts}
         # the decomposition is exact: every miss is late or an outage
         assert r.missed >= r.outages
         assert all(e.feasible for e in r.epochs), f"S3 violated: {pol}"

@@ -22,8 +22,8 @@ sys.path.insert(0, str(pathlib.Path(__file__).resolve().parents[1] / "src"))
 from .common import Csv  # noqa: E402
 
 MODULES = ["profiles", "ould", "heuristics", "mp", "swarm", "runtime",
-           "exec", "tpu_placement", "roofline"]
-QUICK_MODULES = ["profiles", "swarm", "exec"]
+           "exec", "tpu_placement", "roofline", "obs"]
+QUICK_MODULES = ["profiles", "swarm", "exec", "obs"]
 
 
 def main() -> None:

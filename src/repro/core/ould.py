@@ -414,7 +414,7 @@ class _SparseCounters:
     """Mutable tally of what the sparse ladder actually did (one solve)."""
 
     __slots__ = ("n_runs", "n_scanned", "n_dense_equiv", "n_escalations",
-                 "n_dense_fallback", "n_batched")
+                 "n_dense_fallback", "n_batched", "n_jit_compiles")
 
     def __init__(self):
         self.n_runs = 0             # DP kernel invocations (incl. repairs)
@@ -423,6 +423,7 @@ class _SparseCounters:
         self.n_escalations = 0      # k-doubling retries
         self.n_dense_fallback = 0   # requests that hit the dense last resort
         self.n_batched = 0          # requests served by the batched fast path
+        self.n_jit_compiles = 0     # XLA compiles triggered inside the solve
 
     def wrap(self, kernel: Callable, per_run: int, dense_per_run: int):
         """Instrument ``kernel`` so every invocation (the repair loop re-runs
@@ -917,6 +918,7 @@ def _place_batch(placer: _SparsePlacer,
                                            placer.mem_left, placer.comp_left,
                                            placer._head, placer.consts,
                                            placer.k)
+        c0 = batch_dp.compile_count()
         paths0, costs0 = batch_dp.solve_batch(
             placer.spb, placer.Ks, placer.compute_cost,
             np.asarray(uniq, np.int64), cand, valid, placer.consts)
@@ -927,6 +929,7 @@ def _place_batch(placer: _SparsePlacer,
             counters.n_runs += len(uniq)
             counters.n_scanned += len(uniq) * (M - 1) * kk * kk
             counters.n_dense_equiv += len(uniq) * (M - 1) * N * N
+            counters.n_jit_compiles += batch_dp.compile_count() - c0
         # Per-row precomputation shared by every request on the row: the
         # layer-by-layer demand sequence (the commit fold) and the per-node
         # aggregated demand in first-visit order (the _fits_joint fold).
@@ -1190,7 +1193,8 @@ def _solve_dp(prob: Problem, *, include_compute: bool,
                              n_dense_fallback=counters.n_dense_fallback,
                              n_escalations=counters.n_escalations,
                              pruned_fraction=counters.pruned_fraction,
-                             n_batched=counters.n_batched)
+                             n_batched=counters.n_batched,
+                             n_jit_compiles=counters.n_jit_compiles)
     return assign, total, admitted, stats
 
 
@@ -1289,6 +1293,15 @@ class ResolveStats:
     # came certified out of the single jitted dispatch (the rest fell back
     # to the sequential ladder).
     n_batched: int = 0
+    # XLA compiles triggered by this solve's jitted dispatches.  When > 0,
+    # ``solve_time_s`` includes first-dispatch compile time and must not be
+    # read as steady-state solve cost (DESIGN.md §9).
+    n_jit_compiles: int = 0
+
+    @property
+    def cold_dispatch(self) -> bool:
+        """True when the wall time above paid for at least one XLA compile."""
+        return self.n_jit_compiles > 0
 
 
 class IncrementalSolver:
@@ -1476,7 +1489,8 @@ class IncrementalSolver:
             n_dense_fallback=ds.n_dense_fallback if ds else 0,
             n_escalations=ds.n_escalations if ds else 0,
             pruned_fraction=ds.pruned_fraction if ds else 0.0,
-            n_batched=ds.n_batched if ds else 0)
+            n_batched=ds.n_batched if ds else 0,
+            n_jit_compiles=ds.n_jit_compiles if ds else 0)
 
     def resolve(self, rates: np.ndarray, sources: np.ndarray,
                 request_ids=None,
@@ -1586,4 +1600,5 @@ class IncrementalSolver:
             n_dense_fallback=counters.n_dense_fallback if counters else 0,
             n_escalations=counters.n_escalations if counters else 0,
             pruned_fraction=counters.pruned_fraction if counters else 0.0,
-            n_batched=counters.n_batched if counters else 0)
+            n_batched=counters.n_batched if counters else 0,
+            n_jit_compiles=counters.n_jit_compiles if counters else 0)

@@ -40,6 +40,7 @@ import numpy as np
 
 from ..core.profiles import ModelProfile
 from ..models import cnn
+from ..obs import ENGINE, NULL_TRACER
 from ..transport import InProcTransport, Transport
 from .stage_graph import StageGraph, StageTask
 
@@ -134,11 +135,23 @@ class ExecutionEngine:
 
     def __init__(self, layer_fns: Sequence[Callable], *, mesh=None,
                  data_axis: str = "data",
-                 transport: Transport | None = None):
+                 transport: Transport | None = None, tracer=None):
         self.layer_fns = list(layer_fns)
         self.mesh = mesh
         self.data_axis = data_axis
         self.transport = transport if transport is not None else InProcTransport()
+        # Observability: engine spans are real-time (``tracer.now()``) and
+        # reconstructed from the measured walls the engine takes anyway —
+        # nothing is timed inside the jitted closures.  Transfer spans come
+        # from the transport itself (single emission point in _record).
+        self.tracer = tracer if tracer is not None else NULL_TRACER
+        if self.tracer.enabled:
+            self.tracer.intern("stage", "batch", "n_layers")
+            self.tracer.intern("stage_measure", "layer_start", "layer_end")
+            self.tracer.intern("warm_start", "n_ranges")
+            set_tr = getattr(self.transport, "set_tracer", None)
+            if set_tr is not None:
+                set_tr(self.tracer)
         self._closures: dict[tuple[int, int], Callable] = {}
         self._warm: set[tuple[int, int, tuple]] = set()
 
@@ -182,6 +195,10 @@ class ExecutionEngine:
             t0 = time.perf_counter()
             jax.block_until_ready(fn(x))
             best = min(best, time.perf_counter() - t0)
+        if self.tracer.enabled:
+            self.tracer.span(ENGINE, "stage_measure",
+                             self.tracer.now() - best, best,
+                             a0=layer_start, a1=layer_end)
         return best
 
     def warm_start(self, signature: Sequence[tuple[int, int]],
@@ -204,7 +221,12 @@ class ExecutionEngine:
                 acts[s] = self.closure(0, s)(acts[0])
             acts[e] = jax.block_until_ready(self.closure(s, e)(acts[s]))
             self._warm.add((s, e, tuple(acts[s].shape)))
-        return time.perf_counter() - t_begin
+        wall = time.perf_counter() - t_begin
+        if self.tracer.enabled:
+            self.tracer.span(ENGINE, "warm_start",
+                             self.tracer.now() - wall, wall,
+                             a0=len(signature))
+        return wall
 
     def _launch(self, task: StageTask, x: jax.Array) -> tuple[jax.Array, float]:
         """Run one batched stage; returns (output, measured wall seconds)."""
@@ -253,6 +275,13 @@ class ExecutionEngine:
             timings.append(StageTiming(task.node, task.layer_start,
                                        task.layer_end, len(task.requests),
                                        wall))
+            if self.tracer.enabled:
+                # ts backdated by the measured wall so the span covers the
+                # timed run, never the compile _launch keeps off the clock.
+                self.tracer.span(ENGINE, "stage",
+                                 self.tracer.now() - wall, wall,
+                                 lane=task.node, a0=len(task.requests),
+                                 a1=task.layer_end - task.layer_start)
             for b, r in enumerate(task.requests):
                 acts[r] = y[b][None]
                 compute_s[r] += wall

@@ -41,7 +41,18 @@ def main() -> None:
                     help="persistent XLA compilation cache directory "
                          "(repro.exec.compile_cache): repeat runs and "
                          "rejoining nodes warm from disk")
+    ap.add_argument("--trace-out", default=None, metavar="PATH",
+                    help="write a Chrome/Perfetto-loadable trace of this "
+                         "run (repro.obs): solver/admission spans for the "
+                         "pool placement, engine stage walls and transport "
+                         "shipments under --execute")
     args = ap.parse_args()
+
+    tracer = metrics = None
+    if args.trace_out:
+        from repro.obs import MetricsRegistry, Tracer
+        tracer = Tracer()
+        metrics = MetricsRegistry()
 
     import jax
     import numpy as np
@@ -106,25 +117,47 @@ def main() -> None:
         sources = (np.arange(args.batch) % min(2, n)).astype(np.int64)
         prob = Problem(profile, np.full(n, 128e6), np.full(n, 95e9),
                        rates_bits, sources, compute_speed=np.full(n, 9.5e9))
-        cnn_plan = get_planner(args.planner, sparse_k=args.sparse_k).plan(
-            prob, SnapshotView(rates_bits))
+        if tracer is not None:
+            # Route placement through the controller so the trace carries
+            # the solver span + per-request admission verdicts.
+            from repro.runtime.serve import AdmissionController
+            cnn_plan = AdmissionController(
+                args.planner, tracer=tracer, sparse_k=args.sparse_k).admit(
+                prob, SnapshotView(rates_bits),
+                request_ids=list(range(args.batch)))
+        else:
+            cnn_plan = get_planner(args.planner, sparse_k=args.sparse_k).plan(
+                prob, SnapshotView(rates_bits))
         graph = compile_plan(cnn_plan)
         transport = make_transport(args.transport,
                                    n_workers=args.transport_workers)
-        engine = ExecutionEngine(layer_fns_for(profile), transport=transport)
+        engine = ExecutionEngine(layer_fns_for(profile), transport=transport,
+                                 tracer=tracer)
         frames = rng.standard_normal(
             (args.batch, 326, 595, 3)).astype(np.float32)
         try:
+            if tracer is not None:
+                from repro.exec.stage_graph import trace_args
+                from repro.obs import ENGINE
+                t_round = tracer.now()
             report = engine.run(graph, frames,
                                 predicted_s=cnn_plan.evaluate().per_request_s)
+            if tracer is not None:
+                tracer.span(ENGINE, "execute_round", t_round,
+                            tracer.now() - t_round, args=trace_args(graph))
             moving = args.transport != "inproc"
             cal_prob, recon = calibrated_problem(
                 prob, report, transport=transport if moving else None)
             replan = get_planner(args.planner, sparse_k=args.sparse_k).plan(
                 cal_prob, SnapshotView(cal_prob.rates))
             regraph = compile_plan(replan)
+            if tracer is not None:
+                t_round = tracer.now()
             rereport = engine.run(regraph, frames,
                                   predicted_s=replan.evaluate().per_request_s)
+            if tracer is not None:
+                tracer.span(ENGINE, "execute_recal", t_round,
+                            tracer.now() - t_round, args=trace_args(regraph))
         finally:
             transport.close()
         mae0 = report.abs_error_s[list(report.outputs)].mean()
@@ -144,6 +177,27 @@ def main() -> None:
                   f"{replan.problem.comm_source!r}")
         print(f"[exec] predicted-vs-measured MAE {mae0 * 1e3:.2f}ms -> "
               f"{mae1 * 1e3:.2f}ms after calibrated re-solve")
+        if metrics is not None:
+            metrics.counter("exec.tasks").inc(len(graph.tasks))
+            metrics.counter("exec.transfers").inc(len(graph.transfers))
+            metrics.counter("exec.admitted").inc(int(cnn_plan.n_admitted))
+            metrics.gauge("exec.executed_avg_s").set(
+                float(report.executed_s[list(report.outputs)].mean()))
+            metrics.gauge("exec.mae_s").set(float(mae0))
+            metrics.gauge("exec.mae_recal_s").set(float(mae1))
+            for (s, d), ls in sorted(transport.link_stats.items()):
+                metrics.gauge(f"transport.link.{s}-{d}.bytes_per_s").set(
+                    ls.bytes_per_s)
+
+    if tracer is not None:
+        n_ev = tracer.export_chrome(args.trace_out)
+        print(f"[trace] wrote {n_ev} events to {args.trace_out} "
+              f"(n_dropped={tracer.n_dropped}) — load in ui.perfetto.dev")
+        if metrics is not None and metrics.names():
+            snap = metrics.snapshot()
+            print("[trace] metrics: " + ", ".join(
+                f"{k}={v:.4g}" if isinstance(v, float) else f"{k}={v}"
+                for k, v in snap.items() if not isinstance(v, dict)))
 
 
 if __name__ == "__main__":

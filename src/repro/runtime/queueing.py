@@ -262,6 +262,18 @@ class NodeQueues:
         queue-depth term admission prices into its bar."""
         return np.maximum(self.free_at_s - now_s, 0.0)
 
+    def snapshot(self) -> dict:
+        """Lifetime queue tallies for the metrics registry (``queue.*`` in
+        ``MetricsRegistry.snapshot()``): counters plus the realized offered
+        load at the hottest node."""
+        return {"queue.enqueued": self.n_enqueued,
+                "queue.completed": self.n_completed,
+                "queue.dropped": self.n_dropped,
+                "queue.rejected": self.n_rejected,
+                "queue.degraded": self.n_degraded,
+                "queue.max_demand_s": float(self.demand_s.max())
+                if self.demand_s.size else 0.0}
+
     def advance(self, node: np.ndarray, arrival_s: np.ndarray,
                 service_s: np.ndarray,
                 deadline_abs_s: np.ndarray) -> QueueOutcome:

@@ -21,6 +21,7 @@ from ..core import Problem, ResolveStats
 from ..core.latency import evaluate
 from ..core.planner import Plan, Planner, TopologyView, get_planner, make_view
 from ..core.profiles import lm_profile
+from ..obs import ADMISSION, NULL_TRACER, SOLVER
 from . import steps as steps_mod
 
 
@@ -76,9 +77,13 @@ class AdmissionController:
     """
 
     def __init__(self, planner: Planner | str = "incremental",
-                 **planner_options):
+                 tracer=None, **planner_options):
         self.planner: Planner = (get_planner(planner, **planner_options)
                                  if isinstance(planner, str) else planner)
+        # Observability (repro.obs): solver spans + admission verdicts are
+        # emitted per round when a real Tracer is attached; the NullTracer
+        # default keeps this path free.
+        self.tracer = tracer if tracer is not None else NULL_TRACER
         # Per-round solve stats only — a Plan pins its bound Problem (rate
         # matrices), which must not accumulate over a long-running pool.
         self.history: list[ResolveStats] = []
@@ -88,7 +93,8 @@ class AdmissionController:
 
     def admit(self, problem: Problem, view: TopologyView | np.ndarray,
               request_ids=None, *, backlog_s: np.ndarray | None = None,
-              deadline_s: np.ndarray | float | None = None) -> Plan:
+              deadline_s: np.ndarray | float | None = None,
+              now_s: float | None = None) -> Plan:
         """Place this round's active request set; returns the :class:`Plan`.
 
         ``view`` may be a prepared TopologyView or a raw rate array (wrapped
@@ -105,6 +111,10 @@ class AdmissionController:
         what "expected wait = queue backlog" buys.  Note the gate runs after
         the solve, so warm planners still hold capacity for gated streams
         until the next round — conservative, never over-admits.
+
+        ``now_s`` timestamps this round's trace events (simulated seconds in
+        the swarm runtime); ``None`` falls back to the tracer's real-time
+        clock (``tracer.now()``) — the CLI path.
         """
         if isinstance(view, np.ndarray):
             view = make_view(view)
@@ -117,7 +127,41 @@ class AdmissionController:
         self.history.append(plan.solve_stats or ResolveStats(
             0, plan.solution.n_admitted, problem.n_nodes, True,
             plan.solve_time_s))
+        if self.tracer.enabled:
+            self._trace_round(plan, request_ids, now_s)
         return plan
+
+    def _trace_round(self, plan: Plan, request_ids, now_s) -> None:
+        """One SOLVER span per admission round (dur = the solve's wall
+        seconds, rich args from ResolveStats incl. the cold-dispatch flag)
+        plus per-request admit/reject instants on the ADMISSION track."""
+        tr = self.tracer
+        ts = float(now_s) if now_s is not None else tr.now()
+        st = plan.solve_stats
+        args: dict = {"n_admitted": int(plan.n_admitted),
+                      "queue_gated": int(self.last_queue_rejected)}
+        if st is not None:
+            # cold_dispatch=True means solve_time_s paid for ≥1 XLA compile
+            # — do not read this span's dur as steady-state solve cost.
+            args.update(n_kept=int(st.n_kept), n_replaced=int(st.n_replaced),
+                        cold=bool(st.cold), k=int(st.k),
+                        n_batched=int(st.n_batched),
+                        n_jit_compiles=int(st.n_jit_compiles),
+                        cold_dispatch=bool(st.cold_dispatch))
+        tr.intern("solve", "n_admitted", "queue_gated")
+        tr.span(SOLVER, "solve", ts, float(plan.solve_time_s),
+                a0=float(plan.n_admitted),
+                a1=float(self.last_queue_rejected), args=args)
+        if request_ids is None:
+            return
+        ids = np.asarray(request_ids, np.int64)
+        adm = np.asarray(plan.admitted, bool)
+        tss = np.full(ids.shape[0], ts)
+        if adm.any():
+            tr.instant_batch(ADMISSION, "admit", tss[adm], frame=ids[adm])
+        if (~adm).any():
+            tr.instant_batch(ADMISSION, "reject", tss[~adm],
+                             frame=ids[~adm])
 
     def _queue_gate(self, plan: Plan, backlog_s: np.ndarray,
                     deadline_s: np.ndarray | float) -> Plan:

@@ -81,6 +81,8 @@ from ..core.planner import (HorizonView, NoisyHorizonView, SnapshotView,
                             StaleView, available_planners, make_view)
 from ..core.profiles import ModelProfile, lenet_profile
 from ..core.radio import RadioParams, rate_matrix
+from ..obs import (FRAMES, LATENCY_EDGES_S, NULL_TRACER, QUEUE,
+                   MetricsRegistry)
 from .queueing import DeadlineClass, NodeQueues, ServicePolicy
 from .serve import AdmissionController
 
@@ -301,6 +303,10 @@ class SimResult:
     transport: str = "inproc"
     link_bytes_per_s: dict = dataclasses.field(default_factory=dict)
     warm_starts: int = 0         # churn-rejoin warm_start invocations
+    # MetricsRegistry.snapshot() of the run: every layer's telemetry
+    # (sim.* counters, queue.* tallies, solver.* aggregates, the latency
+    # histogram, transport link gauges) behind one dict — DESIGN.md §9.
+    metrics: dict = dataclasses.field(default_factory=dict)
 
     @property
     def deadline_miss_rate(self) -> float:
@@ -425,7 +431,7 @@ def _parse_degradation(spec: str | None) -> tuple[str, float] | None:
 
 
 def _stage_measurer(scn: SwarmScenario, profile: ModelProfile, seed: int,
-                    transport=None):
+                    transport=None, tracer=None):
     """Measured-seconds lookup for stage ranges: one ExecutionEngine per
     simulation, one jit + one measurement per unique (start, end) range —
     hotspot plans collapse to a handful of kernel timings.
@@ -440,7 +446,8 @@ def _stage_measurer(scn: SwarmScenario, profile: ModelProfile, seed: int,
 
     if scn.compile_cache_dir is not None:
         compile_cache.enable(scn.compile_cache_dir)
-    engine = ExecutionEngine(layer_fns_for(profile), transport=transport)
+    engine = ExecutionEngine(layer_fns_for(profile), transport=transport,
+                             tracer=tracer)
     rng = np.random.default_rng(seed)
     frame = rng.standard_normal((1, *scn.frame_hw)).astype(np.float32)
     acts: dict[int, object] = {0: frame}   # boundary activations, lazily
@@ -561,11 +568,20 @@ class _Simulation:
     accounting) — the decomposed form of the old monolithic ``simulate``."""
 
     def __init__(self, scn: SwarmScenario, policy: str, seed: int,
-                 profile: ModelProfile, cold_resolves: bool):
+                 profile: ModelProfile, cold_resolves: bool, tracer=None):
         if policy not in available_planners():
             raise ValueError(f"unknown policy {policy!r}; one of "
                              f"{available_planners()}")
         self.scn = scn
+        # Observability: NullTracer by default (traced-off path bit-identical
+        # — every emit below is guarded by ``trace.enabled``); the registry
+        # is filled once at end of run from the layers' own counters.
+        self.trace = tracer if tracer is not None else NULL_TRACER
+        self.metrics = MetricsRegistry()
+        self._churn_track = (self.trace.track("churn")
+                             if self.trace.enabled else -1)
+        if self.trace.enabled:
+            self.trace.intern("frame", "base_s", "service_s")
         self.policy = policy
         self.seed = seed
         self.profile = profile
@@ -589,7 +605,8 @@ class _Simulation:
                                         rel_change=scn.rel_change,
                                         max_path_cost=scn.max_path_cost_s,
                                         sparse_k=scn.sparse_k,
-                                        batch_solve=scn.batch_solve)
+                                        batch_solve=scn.batch_solve,
+                                        tracer=self.trace)
         self.wants_horizon = getattr(self.ctrl.planner, "preferred_view",
                                      "snapshot") == "horizon"
         self.degradation = _parse_degradation(scn.view_degradation)
@@ -599,7 +616,8 @@ class _Simulation:
             self.transport = make_transport(scn.transport,
                                             group_of=mob.group_of)
         measure = (_stage_measurer(scn, profile, seed,
-                                   transport=self.transport)
+                                   transport=self.transport,
+                                   tracer=self.trace)
                    if scn.execute else None)
         self.measure = measure
         self.warm_starts = 0         # churn-rejoin warm_start invocations
@@ -620,6 +638,7 @@ class _Simulation:
         self.served = self.missed = self.outages = 0
         self.dropped = self.degraded = self.frames_rejected = 0
         self.wait_total_s = 0.0
+        self._solver_jit_compiles = 0
 
     # -- epoch layer --------------------------------------------------------
     def _build_view(self, tick: int):
@@ -662,10 +681,13 @@ class _Simulation:
         plan = self.ctrl.admit(
             Problem(self.profile, self.mem_cap, self.comp_cap, view.rates,
                     sources, self.speed), view, request_ids=ids,
-            backlog_s=backlog, deadline_s=deadline_s)
+            backlog_s=backlog, deadline_s=deadline_s,
+            now_s=tick * scn.tick_s)
         stats = plan.solve_stats
         n_kept = stats.n_kept if stats is not None else 0
         n_rep = stats.n_replaced if stats is not None else len(act)
+        if stats is not None:
+            self._solver_jit_compiles += stats.n_jit_compiles
         for row, s in enumerate(act):
             if plan.admitted[row]:
                 self.placed[s.id] = plan.assign[row]
@@ -714,6 +736,10 @@ class _Simulation:
         n_out = int(outage.sum())
         self.outages += n_out
         self.missed += n_out                 # inf > any deadline
+        if self.trace.enabled and n_out:
+            self.trace.instant_batch(
+                FRAMES, "outage", np.full(n_out, t * self.scn.tick_s),
+                lane=src[outage], frame=tab.ids[rows[outage]])
         ok = ~outage
         if not ok.any():
             return
@@ -729,6 +755,8 @@ class _Simulation:
             "deadline_abs": arrival + tab.deadline_s[r],
             "base": base,
         }
+        if self.trace.enabled:
+            self._pending["ids"] = tab.ids[r]
 
     # -- queue layer (completion accounting) --------------------------------
     def on_queue_advance(self, t: int) -> None:
@@ -741,15 +769,40 @@ class _Simulation:
         self.frames_rejected += int(out.rejected.sum())
         self.degraded += int(out.degraded.sum())
         done = out.completed
-        if not done.any():
-            return
-        lat = p["base"][done] + out.wait_s[done] + out.service_used_s[done]
-        self.wait_total_s += float(out.wait_s[done].sum())
-        self.missed += int((lat > p["deadline_abs"][done]
-                            - p["arrival"][done]).sum())
-        finite = lat[np.isfinite(lat)]
-        if finite.size:
-            self._lat_chunks.append(finite)
+        lat = None
+        if done.any():
+            lat = (p["base"][done] + out.wait_s[done]
+                   + out.service_used_s[done])
+            self.wait_total_s += float(out.wait_s[done].sum())
+            self.missed += int((lat > p["deadline_abs"][done]
+                                - p["arrival"][done]).sum())
+            finite = lat[np.isfinite(lat)]
+            if finite.size:
+                self._lat_chunks.append(finite)
+        if self.trace.enabled:
+            self._trace_queue_outcome(p, out, lat)
+
+    def _trace_queue_outcome(self, p: dict, out, lat) -> None:
+        """Rebuild this window's per-frame spans from the Lindley kernel
+        outputs — post-hoc and vectorized, never inside the kernel
+        (DESIGN.md §9).  Span algebra the audit test pins:
+        ``frame.dur == base_s + queue_wait.dur + service.dur``."""
+        tr, ids, node, arr = self.trace, p["ids"], p["node"], p["arrival"]
+        done = out.completed
+        if lat is not None:
+            a, ln, fr = arr[done], node[done], ids[done]
+            sv = out.service_used_s[done]
+            tr.span_batch(QUEUE, "queue_wait", a, out.wait_s[done],
+                          lane=ln, frame=fr)
+            tr.span_batch(QUEUE, "service", out.start_s[done], sv,
+                          lane=ln, frame=fr)
+            tr.span_batch(FRAMES, "frame", a, lat, lane=ln, frame=fr,
+                          a0=p["base"][done], a1=sv)
+        for name, mask in (("drop", out.dropped),
+                           ("reject_queue", out.rejected)):
+            if mask.any():
+                tr.instant_batch(FRAMES, name, arr[mask], lane=node[mask],
+                                 frame=ids[mask])
 
     def _warm_rejoin(self) -> None:
         """Pre-compile the live plan's stage signature on churn rejoin.
@@ -781,14 +834,25 @@ class _Simulation:
             ev = q.pop()
             if ev.kind == EventKind.ARRIVAL:
                 self.active[ev.payload] = self.streams[ev.payload]
+                if self.trace.enabled:
+                    self.trace.instant(
+                        FRAMES, "arrival", ev.time,
+                        lane=self.streams[ev.payload].source,
+                        frame=ev.payload)
             elif ev.kind == EventKind.DEPARTURE:
                 self.active.pop(ev.payload, None)
                 if self.placed.pop(ev.payload, None) is not None:
                     self._dirty = True
             elif ev.kind == EventKind.NODE_FAIL:
                 self.alive[ev.payload] = False
+                if self.trace.enabled:
+                    self.trace.instant(self._churn_track, "node_fail",
+                                       ev.time, lane=ev.payload)
             elif ev.kind == EventKind.NODE_REJOIN:
                 self.alive[ev.payload] = True
+                if self.trace.enabled:
+                    self.trace.instant(self._churn_track, "node_rejoin",
+                                       ev.time, lane=ev.payload)
                 self._warm_rejoin()
             elif ev.kind == EventKind.EPOCH:
                 self.on_epoch(int(round(ev.time / self.scn.tick_s)))
@@ -803,6 +867,7 @@ class _Simulation:
         link_bw = ({k: ls.bytes_per_s
                     for k, ls in self.transport.link_stats.items()}
                    if self.transport is not None else {})
+        self._fill_metrics(lats, link_bw)
         return SimResult(self.policy, len(self.streams), n_never,
                          self.served, self.missed, lats, self.epochs,
                          outages=self.outages, dropped=self.dropped,
@@ -813,20 +878,65 @@ class _Simulation:
                          transport=self.scn.transport if self.scn.execute
                          else "inproc",
                          link_bytes_per_s=link_bw,
-                         warm_starts=self.warm_starts)
+                         warm_starts=self.warm_starts,
+                         metrics=self.metrics.snapshot())
+
+    def _fill_metrics(self, lats: np.ndarray, link_bw: dict) -> None:
+        """Fold every layer's private run telemetry into the registry —
+        the one ``snapshot()`` SimResult/bench/CLI report (DESIGN.md §9).
+        Filled once at end of run from counters the layers kept anyway, so
+        the per-tick hot path is untouched."""
+        m = self.metrics
+        for name, v in (("sim.arrivals", len(self.streams)),
+                        ("sim.served", self.served),
+                        ("sim.missed", self.missed),
+                        ("sim.outages", self.outages),
+                        ("sim.dropped", self.dropped),
+                        ("sim.degraded", self.degraded),
+                        ("sim.frames_rejected", self.frames_rejected),
+                        ("sim.completions", int(lats.size)),
+                        ("solver.epochs", len(self.epochs)),
+                        ("solver.n_kept",
+                         sum(e.n_kept for e in self.epochs)),
+                        ("solver.n_replaced",
+                         sum(e.n_replaced for e in self.epochs)),
+                        ("solver.queue_rejected",
+                         sum(e.n_queue_rejected for e in self.epochs)),
+                        ("solver.jit_compiles", self._solver_jit_compiles),
+                        ("solver.warm_starts", self.warm_starts)):
+            m.counter(name).inc(v)
+        m.gauge("sim.wait_total_s").set(self.wait_total_s)
+        m.gauge("solver.total_solve_s").set(
+            float(sum(e.solve_time_s for e in self.epochs)))
+        for name, v in self.queues.snapshot().items():
+            if isinstance(v, float):
+                m.gauge(name).set(v)
+            else:
+                m.counter(name).inc(v)
+        m.histogram("sim.latency_s", LATENCY_EDGES_S).observe_many(lats)
+        for link, bps in link_bw.items():
+            m.gauge(f"transport.link.{link}.bytes_per_s").set(float(bps))
+        if self.trace.enabled:
+            m.gauge("trace.n_events").set(self.trace.n_events)
+            m.gauge("trace.n_dropped").set(self.trace.n_dropped)
 
 
 def simulate(scn: SwarmScenario, policy: str, seed: int = 0, *,
              profile: ModelProfile | None = None,
-             cold_resolves: bool = False) -> SimResult:
+             cold_resolves: bool = False, tracer=None) -> SimResult:
     """Run one policy over the scenario's event tape.
 
     ``cold_resolves=True`` forces every epoch re-solve from scratch (the
     baseline the warm-started incremental path is measured against); it only
     affects solve *time*, never the event tape.
+
+    ``tracer`` is an optional :class:`repro.obs.Tracer`: per-frame spans are
+    reconstructed from the queue kernel outputs onto it (timestamps in
+    *simulated* seconds), plus solver/admission/churn events; ``None`` keeps
+    the NullTracer default — the traced-off serving path is bit-identical.
     """
     return _Simulation(scn, policy, seed, profile or lenet_profile(),
-                       cold_resolves).run()
+                       cold_resolves, tracer).run()
 
 
 def compare_policies(scn: SwarmScenario, seed: int = 0,

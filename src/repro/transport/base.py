@@ -22,6 +22,8 @@ from typing import Protocol, runtime_checkable
 
 import numpy as np
 
+from ..obs import NULL_TRACER, TRANSPORT
+
 
 @dataclasses.dataclass(frozen=True)
 class ShipResult:
@@ -70,12 +72,28 @@ class TransportBase:
     def __init__(self):
         self.link_stats: dict[tuple[int, int], LinkStats] = {}
         self.moved_bytes: float = 0.0   # bytes that actually left the process
+        self._tracer = NULL_TRACER
+
+    def set_tracer(self, tracer) -> None:
+        """Attach a :class:`repro.obs.Tracer`: every recorded shipment emits
+        one TRANSPORT span (real-time domain, ``tracer.now()``) with payload
+        bytes and realized bandwidth as args.  All backends funnel through
+        :meth:`_record`, so this is the single emission point — the engine
+        and the swarm's substrate-sampling path never double-emit."""
+        self._tracer = tracer if tracer is not None else NULL_TRACER
+        if self._tracer.enabled:
+            self._tracer.intern("ship", "nbytes", "bytes_per_s")
 
     def _record(self, src: int, dst: int, nbytes: int, wall_s: float) -> None:
         ls = self.link_stats.setdefault((src, dst), LinkStats())
         ls.n += 1
         ls.nbytes += nbytes
         ls.wall_s += wall_s
+        if self._tracer.enabled:
+            self._tracer.span(
+                TRANSPORT, "ship", self._tracer.now() - wall_s, wall_s,
+                lane=src, a0=float(nbytes),
+                a1=nbytes / wall_s if wall_s > 0 else float("inf"))
 
     def measured_spb(self, n_nodes: int) -> np.ndarray:
         """(N, N) realized seconds/byte; NaN where the link was never

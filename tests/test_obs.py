@@ -1,0 +1,304 @@
+"""repro.obs: flight-recorder tracer, metrics registry, and the end-to-end
+per-frame latency-breakdown audit (DESIGN.md §9)."""
+
+import dataclasses
+import json
+
+import jax
+import numpy as np
+import pytest
+
+from repro.core import Problem, Solution, lenet_profile
+from repro.core.mobility import RPGMobility, RPGParams
+from repro.core.planner import Plan
+from repro.core.radio import RadioParams, rate_matrix
+from repro.exec import ExecutionEngine, compile_plan, layer_fns_for
+from repro.obs import (ADMISSION, FRAMES, NULL_TRACER, QUEUE, SOLVER,
+                       Counter, Gauge, Histogram, MetricsRegistry,
+                       NullTracer, Tracer)
+from repro.runtime.serve import AdmissionController
+from repro.runtime.swarm import SwarmScenario, simulate
+
+MB = 1e6
+
+# S6-style sustained overload, trimmed: one group (queue-driven tails),
+# admission uncapped, churn on — every terminal frame fate is reachable.
+OVERLOAD = SwarmScenario(
+    n_groups=1, duration_ticks=100, epoch_ticks=10, arrival_rate_hz=4.5,
+    hold_ticks_mean=240.0, mem_mb_hotspot_group=4096.0,
+    mem_mb_other_groups=4096.0, comp_cap_flops=1e18, gflops=5e9,
+    deadline_s=2.0, mtbf_s=90.0, mttr_s=30.0)
+
+
+# ---------------------------------------------------------------------------
+# tracer core
+# ---------------------------------------------------------------------------
+
+def test_ring_keeps_latest_and_counts_dropped():
+    tr = Tracer(capacity=8)
+    for i in range(12):
+        tr.span(QUEUE, "s", float(i), 0.5, lane=i, frame=100 + i)
+    assert tr.n_events == 8 and tr.n_dropped == 4 and tr.seq == 12
+    ev = tr.events()
+    np.testing.assert_array_equal(ev["ts"], np.arange(4.0, 12.0))
+    np.testing.assert_array_equal(ev["frame"], np.arange(104, 112))
+    assert list(ev["name"]) == ["s"] * 8
+
+
+def test_span_batch_scalar_and_array_operands():
+    tr = Tracer(capacity=64)
+    ts = np.array([1.0, 2.0, 3.0])
+    tr.span_batch(QUEUE, "w", ts, np.array([0.1, 0.2, 0.3]),
+                  lane=np.array([5, 6, 7]), frame=np.array([10, 11, 12]),
+                  a0=2.5)                       # scalar broadcast: slice fill
+    tr.instant_batch(FRAMES, "drop", ts + 9.0, lane=1)
+    w = tr.select("w")
+    np.testing.assert_allclose(w["dur"], [0.1, 0.2, 0.3])
+    np.testing.assert_array_equal(w["lane"], [5, 6, 7])
+    np.testing.assert_array_equal(w["frame"], [10, 11, 12])
+    np.testing.assert_allclose(w["a0"], 2.5)
+    d = tr.select("drop")
+    assert (d["dur"] == -1.0).all() and (d["lane"] == 1).all()
+    tr.span_batch(QUEUE, "w", np.zeros(0), 0.0)   # empty append is a no-op
+    assert tr.n_events == 6
+
+
+def test_batch_append_wraps_and_oversize_keeps_newest():
+    tr = Tracer(capacity=8)
+    tr.span_batch(QUEUE, "a", np.arange(5.0), 0.1)      # fills 0..4
+    tr.span_batch(QUEUE, "b", np.arange(5.0) + 10, 0.1)  # wraps
+    ev = tr.events()                                     # oldest-first
+    np.testing.assert_array_equal(ev["ts"], [2, 3, 4, 10, 11, 12, 13, 14])
+    assert tr.n_dropped == 2
+    big = Tracer(capacity=4)
+    big.span_batch(QUEUE, "c", np.arange(100.0), 0.1)   # n >= capacity
+    np.testing.assert_array_equal(big.events()["ts"], [96, 97, 98, 99])
+    assert big.n_dropped == 96
+
+
+def test_intern_and_track_registration():
+    tr = Tracer(capacity=8)
+    assert tr.intern("solve", "n_admitted", "gated") == tr.intern("solve")
+    code = tr.track("my_subsystem")             # new subsystem joins here
+    assert code == len(("admission", "solver", "queue", "engine",
+                        "transport", "frames"))
+    assert tr.track("my_subsystem") == code and tr.track("frames") == FRAMES
+    tr.span(code, "tick", 0.0, 1.0)
+    assert tr.events()["track"][0] == "my_subsystem"
+
+
+def test_export_chrome_format(tmp_path):
+    tr = Tracer(capacity=16)
+    tr.intern("solve", "n_admitted", "queue_gated")
+    tr.span(SOLVER, "solve", 1.0, 0.25, a0=3.0, a1=1.0,
+            args={"cold_dispatch": True})
+    tr.instant(ADMISSION, "admit", 1.5, frame=7)
+    path = tmp_path / "t.json"
+    n = tr.export_chrome(path)
+    doc = json.loads(path.read_text())
+    assert doc["otherData"]["n_dropped"] == 0
+    evs = doc["traceEvents"]
+    assert n == len(evs)
+    meta = [e for e in evs if e["ph"] == "M"]
+    assert {m["args"]["name"] for m in meta if m["name"] == "process_name"} \
+        == {"solver", "admission"}
+    span = next(e for e in evs if e["ph"] == "X")
+    assert span["ts"] == 1.0e6 and span["dur"] == 0.25e6   # microseconds
+    assert span["args"] == {"n_admitted": 3.0, "queue_gated": 1.0,
+                            "cold_dispatch": True}          # labels + rich
+    inst = next(e for e in evs if e["ph"] == "i")
+    assert inst["s"] == "t" and inst["args"]["frame"] == 7
+
+
+def test_null_tracer_is_inert():
+    nt = NullTracer()
+    assert not nt.enabled and NULL_TRACER.enabled is False
+    nt.span(QUEUE, "x", 0.0, 1.0)
+    nt.instant(QUEUE, "x", 0.0)
+    nt.span_batch(QUEUE, "x", np.arange(3.0), 0.1)
+    nt.instant_batch(QUEUE, "x", np.arange(3.0))
+    assert nt.n_events == 0 and nt.n_dropped == 0 and nt.now() == 0.0
+    assert nt.track("anything") == -1
+
+
+# ---------------------------------------------------------------------------
+# metrics registry
+# ---------------------------------------------------------------------------
+
+def test_metrics_instruments_and_snapshot():
+    m = MetricsRegistry()
+    m.counter("sim.served").inc(3)
+    m.counter("sim.served").inc()               # same instrument
+    m.gauge("solver.total_solve_s").set(1.25)
+    h = m.histogram("sim.latency_s", (0.1, 1.0, 10.0))
+    h.observe_many(np.array([0.05, 0.5, 0.5, 2.0, 100.0]))
+    h.observe(0.5)
+    snap = m.snapshot()
+    assert snap["sim.served"] == 4
+    assert snap["solver.total_solve_s"] == 1.25
+    assert snap["sim.latency_s"]["count"] == 6
+    assert snap["sim.latency_s"]["counts"] == [1, 3, 1, 1]
+    assert h.quantile(0.5) == 1.0               # bucket upper edge
+    assert h.quantile(1.0) == float("inf")      # overflow bucket
+    assert h.min == 0.05 and h.max == 100.0
+    assert m.names() == sorted(snap)
+
+
+def test_metrics_kind_conflict_and_histogram_edges():
+    m = MetricsRegistry()
+    m.counter("x")
+    with pytest.raises(ValueError, match="already registered"):
+        m.gauge("x")
+    with pytest.raises(ValueError, match="needs edges"):
+        m.histogram("h")
+    with pytest.raises(ValueError, match="strictly increasing"):
+        Histogram((1.0, 1.0))
+    c, g = Counter(), Gauge()
+    c.inc(2.5)
+    g.set(7)
+    assert c.value == 2.5 and g.value == 7
+
+
+# ---------------------------------------------------------------------------
+# end-to-end audit (the satellite acceptance test)
+# ---------------------------------------------------------------------------
+
+def test_traced_off_path_bit_identical():
+    """Default NullTracer run == untraced run == ring-buffer run."""
+    scn = dataclasses.replace(OVERLOAD, duration_ticks=40)
+    r0 = simulate(scn, "nearest", seed=3)
+    r1 = simulate(scn, "nearest", seed=3, tracer=NullTracer())
+    r2 = simulate(scn, "nearest", seed=3, tracer=Tracer(1 << 16))
+    for r in (r1, r2):
+        assert (r.served, r.missed, r.outages, r.dropped,
+                r.frames_rejected) == (r0.served, r0.missed, r0.outages,
+                                       r0.dropped, r0.frames_rejected)
+        np.testing.assert_array_equal(r.latencies, r0.latencies)
+    assert r0.metrics["sim.served"] == r0.served     # registry agrees too
+
+
+@pytest.mark.parametrize("policy,fate", [("edf+drop", "dropped"),
+                                         ("fifo+reject", "frames_rejected")])
+def test_latency_breakdown_audit(policy, fate):
+    """Span algebra ``frame.dur == base + wait + service`` for every
+    completion, and event conservation vs SimResult: every served frame
+    ends as exactly one of outage / completion span / drop / reject."""
+    scn = dataclasses.replace(OVERLOAD, service_policy=policy)
+    tr = Tracer(1 << 18)
+    r = simulate(scn, "nearest", seed=1, tracer=tr)
+    assert getattr(r, fate) > 0 and r.outages > 0    # the fates all occur
+    assert tr.n_dropped == 0                         # ring held everything
+
+    f, w, s = tr.select("frame"), tr.select("queue_wait"), tr.select("service")
+    # batch appends preserve emission order: the three span families align
+    np.testing.assert_array_equal(f["frame"], w["frame"])
+    np.testing.assert_array_equal(f["frame"], s["frame"])
+    np.testing.assert_allclose(f["dur"], f["a0"] + w["dur"] + s["dur"],
+                               atol=1e-9)
+    assert f["ts"].size == r.latencies.size
+    np.testing.assert_allclose(np.sort(f["dur"]), np.sort(r.latencies))
+
+    n_drop = tr.select("drop")["ts"].size
+    n_rej = tr.select("reject_queue")["ts"].size
+    n_out = tr.select("outage")["ts"].size
+    assert n_out == r.outages and n_drop == r.dropped
+    assert n_rej == r.frames_rejected
+    assert r.served == n_out + f["ts"].size + n_drop + n_rej
+
+    # the registry snapshot mirrors the same totals
+    assert r.metrics["sim.served"] == r.served
+    assert r.metrics["queue.dropped"] == r.dropped
+    assert r.metrics["sim.latency_s"]["count"] == r.latencies.size
+
+
+def test_trace_carries_churn_and_epoch_solves(tmp_path):
+    scn = dataclasses.replace(OVERLOAD, duration_ticks=60)
+    tr = Tracer(1 << 17)
+    r = simulate(scn, "incremental", seed=2, tracer=tr)
+    solves = tr.select("solve")
+    assert solves["ts"].size >= 1                # epoch re-solves traced
+    assert (tr.select("node_fail")["ts"].size
+            + tr.select("node_rejoin")["ts"].size) > 0
+    assert tr.select("arrival")["ts"].size == r.metrics["sim.arrivals"]
+    # exported trace is valid Chrome JSON with the churn track registered
+    path = tmp_path / "swarm.json"
+    tr.export_chrome(path)
+    doc = json.loads(path.read_text())
+    names = {e["args"]["name"] for e in doc["traceEvents"]
+             if e.get("name") == "process_name"}
+    assert {"solver", "queue", "frames", "churn"} <= names
+
+
+# ---------------------------------------------------------------------------
+# solver spans: cold-dispatch flag (the ResolveStats wall-time fix)
+# ---------------------------------------------------------------------------
+
+def _pool_problem(n_nodes=23, requests=6, seed=0):
+    mob = RPGMobility(RPGParams(n_uavs=n_nodes, area_m=150.0,
+                                homogeneous=False), seed=seed)
+    rates = rate_matrix(mob.positions(1, seed=seed)[0], RadioParams())
+    src = (np.arange(requests) % 3).astype(np.int64)
+    return Problem(lenet_profile(), np.full(n_nodes, 4096 * MB),
+                   np.full(n_nodes, 1e18), rates, src,
+                   compute_speed=np.full(n_nodes, 9.5e9))
+
+
+def test_cold_dispatch_flag_separates_compile_from_solve():
+    """A batched-DP solve that triggered XLA compilation flags its stats;
+    the identical re-solve does not — so solve_time_s is only read as
+    steady-state cost when cold_dispatch is False."""
+    prob = _pool_problem()       # unusual shape ⇒ compiles within this test
+    tr = Tracer(1 << 12)
+    ctrl = AdmissionController("ould-dp-sparse", tracer=tr, batch_solve=True)
+    ids = list(range(prob.n_requests))
+    p1 = ctrl.admit(prob, prob.rates, request_ids=ids, now_s=0.0)
+    p2 = ctrl.admit(prob, prob.rates, request_ids=ids, now_s=1.0)
+    s1, s2 = p1.solve_stats, p2.solve_stats
+    assert s1.n_batched > 0
+    assert s2.n_jit_compiles == 0 and not s2.cold_dispatch
+    assert s1.n_jit_compiles >= s2.n_jit_compiles
+    # both rounds traced: solver spans carry the flag in their rich args
+    ev = tr.events()
+    solver_rich = [tr._rich[k] for k in sorted(tr._rich)
+                   if "cold_dispatch" in tr._rich[k]]
+    assert len(solver_rich) == 2
+    assert solver_rich[1]["cold_dispatch"] is False
+    assert ev["name"].tolist().count("solve") == 2
+    # per-request admission verdict instants cover the whole batch
+    n_adm = tr.select("admit")["ts"].size
+    n_rej = tr.select("reject")["ts"].size
+    assert n_adm + n_rej == 2 * len(ids)
+
+
+# ---------------------------------------------------------------------------
+# engine + transport spans
+# ---------------------------------------------------------------------------
+
+def test_engine_and_transport_spans():
+    """One ``stage`` span per launched task (backdated: compile excluded),
+    one ``ship`` span per boundary transfer, bytes accounted exactly."""
+    profile = lenet_profile()
+    prob = _pool_problem(n_nodes=6, requests=2)
+    M = prob.n_layers
+    assign = np.zeros((2, M), np.int64)
+    assign[:, 3:] = 1                            # 2 stages: layers cross a link
+    sol = Solution(assign, 0.0, "feasible", 0.0, np.ones(2, bool),
+                   solver="manual")
+    graph = compile_plan(Plan(sol, "manual", "snapshot", prob))
+    tr = Tracer(1 << 12)
+    engine = ExecutionEngine(layer_fns_for(profile, key=jax.random.PRNGKey(0)),
+                             tracer=tr)
+    frames = np.random.default_rng(0).standard_normal(
+        (2, 326, 595, 3)).astype(np.float32)
+    engine.run(graph, frames)
+    stages = tr.select("stage")
+    ships = tr.select("ship")
+    assert stages["ts"].size == len(graph.tasks)
+    assert (stages["dur"] > 0).all() and (stages["ts"] >= 0).all()
+    assert ships["ts"].size == len(graph.transfers)
+    # a0 = realized bytes per shipment (batched shared stages ship once for
+    # all requests, so realized >= the per-request modeled boundary bytes)
+    assert ships["a0"].min() > 0
+    assert ships["a0"].sum() >= max(t.nbytes for t in graph.transfers)
+    ev = tr.events()
+    assert set(ev["track"]) == {"engine", "transport"}
