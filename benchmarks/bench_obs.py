@@ -11,7 +11,10 @@ Claims:
       completion, and trace-event conservation matches SimResult exactly
       (served == outage instants + frame spans + drop instants + queue
       reject instants) — the per-frame reconstruction from the Lindley
-      kernel outputs loses nothing.
+      kernel outputs loses nothing.  (The tape runs in the pinned
+      ``bottleneck`` compat mode; the per-hop twin of this audit — frame
+      latency conserved across hop_wait/hop_service/link spans — is gated
+      in ``bench_swarm`` S8 on the per-hop overload trace.)
 
 Artifacts: ``trace_overload_{quick,full}.json`` (the audited S6 overload
 trace, Perfetto-loadable — CI uploads the quick one, nightly the full ones)

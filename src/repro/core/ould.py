@@ -589,11 +589,31 @@ def _repair_capacity(path: np.ndarray, mem: list[float], comp: list[float],
     return bool(np.all(m_use <= mem_left + 1e-9) and np.all(c_use <= comp_left + 1e-9))
 
 
+CAPACITY_REPAIRS = ("halve", "gentle")
+
+
+def _gentle_shrink(adv: np.ndarray, busy: int, load: float,
+                   demands: list[float]) -> None:
+    """The gentle capacity-repair step: advertise ``load − min hosted layer``
+    on the overloaded node instead of halving — the node sheds just enough
+    for its smallest hosted layer to move, rather than (potentially) being
+    zeroed while it could still host one layer.  When that target would not
+    strictly shrink the advertisement (with ≥ 2 hosted layers it never
+    excludes any of them), peel the *largest* hosted layer by advertising
+    one ulp below its demand — guaranteed progress in the hosted-set
+    lattice, same 4N iteration bound as halving."""
+    new = min(adv[busy], load - min(demands))
+    if new >= adv[busy]:
+        new = np.nextafter(max(demands), 0.0)
+    adv[busy] = max(new, 0.0)
+
+
 def _place_request(spb: np.ndarray, K: list[float], Ks: float, src: int,
                    mem: list[float], comp: list[float],
                    mem_left: np.ndarray, comp_left: np.ndarray,
                    compute_cost: np.ndarray | None,
-                   kernel: Callable = _dp_single_request) -> tuple[np.ndarray | None, float]:
+                   kernel: Callable = _dp_single_request,
+                   capacity_repair: str = "halve") -> tuple[np.ndarray | None, float]:
     """Place ONE request against residual capacity: lattice DP + repair loop.
 
     The lattice DP checks per-layer feasibility, not the joint within-request
@@ -605,7 +625,17 @@ def _place_request(spb: np.ndarray, K: list[float], Ks: float, src: int,
     ``kernel`` is the single-request DP — the dense N×N scan by default, or a
     pruned k-candidate kernel (the sparse solver runs the same repair loop,
     only the inner shortest-path search changes).
+
+    ``capacity_repair`` picks the shrink rule: ``"halve"`` (default, the
+    pinned-baseline rule) cuts the busiest node's advertised capacity by 2×
+    and zeroes it below the smallest layer demand — which can exclude a node
+    that still fit one layer; ``"gentle"`` sheds only ``load − min hosted
+    layer`` (:func:`_gentle_shrink`), admitting strictly more under
+    contention.
     """
+    if capacity_repair not in CAPACITY_REPAIRS:
+        raise ValueError(f"unknown capacity_repair {capacity_repair!r}; "
+                         f"one of {CAPACITY_REPAIRS}")
     N = spb.shape[0]
     path, cost = kernel(spb, K, Ks, src, mem, comp,
                         mem_left, comp_left, compute_cost)
@@ -625,14 +655,24 @@ def _place_request(spb: np.ndarray, K: list[float], Ks: float, src: int,
         if m_over.max() >= c_over.max() / max(comp_left.max(), 1e-9) * \
                 max(mem_left.max(), 1e-9):
             busy = int(m_over.argmax())
-            mem_adv[busy] = max(mem_adv[busy] / 2.0, 0.0)
-            if mem_adv[busy] < min((m for m in mem if m > 0), default=0):
-                mem_adv[busy] = 0.0
+            if capacity_repair == "gentle":
+                _gentle_shrink(mem_adv, busy, m_load[busy],
+                               [mem[j] for j, i in enumerate(path)
+                                if i == busy and mem[j] > 0] or [0.0])
+            else:
+                mem_adv[busy] = max(mem_adv[busy] / 2.0, 0.0)
+                if mem_adv[busy] < min((m for m in mem if m > 0), default=0):
+                    mem_adv[busy] = 0.0
         else:
             busy = int(c_over.argmax())
-            comp_adv[busy] = max(comp_adv[busy] / 2.0, 0.0)
-            if comp_adv[busy] < min((c for c in comp if c > 0), default=0):
-                comp_adv[busy] = 0.0
+            if capacity_repair == "gentle":
+                _gentle_shrink(comp_adv, busy, c_load[busy],
+                               [comp[j] for j, i in enumerate(path)
+                                if i == busy and comp[j] > 0] or [0.0])
+            else:
+                comp_adv[busy] = max(comp_adv[busy] / 2.0, 0.0)
+                if comp_adv[busy] < min((c for c in comp if c > 0), default=0):
+                    comp_adv[busy] = 0.0
         path, cost = kernel(spb, K, Ks, src, mem, comp,
                             mem_adv, comp_adv, compute_cost)
     if path is None or not _repair_capacity(path, mem, comp, mem_left,
@@ -680,13 +720,15 @@ class _SparsePlacer:
                  mem_left: np.ndarray, comp_left: np.ndarray,
                  compute_cost: np.ndarray | None, *, k: int,
                  max_path_cost: float | None = None,
-                 counters: _SparseCounters | None = None):
+                 counters: _SparseCounters | None = None,
+                 capacity_repair: str = "halve"):
         self.spb = spb
         self.K, self.Ks, self.mem, self.comp = K, Ks, mem, comp
         self.mem_left, self.comp_left = mem_left, comp_left
         self.compute_cost = compute_cost
         self.k = max(1, int(k))
         self.max_path_cost = max_path_cost
+        self.capacity_repair = capacity_repair
         self.counters = counters
         self.consts = _sparse_consts(spb, K, mem, comp)
         _, self._mem_a, self._comp_a, _ = self.consts
@@ -788,7 +830,8 @@ class _SparsePlacer:
                 path, cost = _place_request(self.spb, self.K, self.Ks, src,
                                             self.mem, self.comp,
                                             self.mem_left, self.comp_left,
-                                            self.compute_cost, kernel=kernel)
+                                            self.compute_cost, kernel=kernel,
+                                            capacity_repair=self.capacity_repair)
                 stages.append((lvl, None, None, *first[0], True))
                 result = (path, cost)
                 break
@@ -826,7 +869,8 @@ class _SparsePlacer:
                 path, cost = _place_request(self.spb, self.K, self.Ks, src,
                                             self.mem, self.comp,
                                             self.mem_left, self.comp_left,
-                                            self.compute_cost, kernel=base)
+                                            self.compute_cost, kernel=base,
+                                            capacity_repair=self.capacity_repair)
                 if path is not None and (self.max_path_cost is None
                                          or cost <= self.max_path_cost):
                     result = (path, cost)
@@ -1122,7 +1166,8 @@ def placement_drift(prob: Problem, assign: np.ndarray, admitted: np.ndarray,
 
 def _solve_dp(prob: Problem, *, include_compute: bool,
               max_path_cost: float | None = None,
-              sparse_k: int | None = None, batch_solve: bool = False
+              sparse_k: int | None = None, batch_solve: bool = False,
+              capacity_repair: str = "halve"
               ) -> tuple[np.ndarray, float, np.ndarray, "ResolveStats | None"]:
     """Sequential greedy-DP: requests placed one at a time (exact per request,
     greedy across requests).  Returns (assign, total_comm_latency, admitted,
@@ -1156,7 +1201,8 @@ def _solve_dp(prob: Problem, *, include_compute: bool,
         placer = _SparsePlacer(spb, K, prob.profile.input_bytes, mem, comp,
                                mem_left, comp_left, compute_cost,
                                k=sparse_k, max_path_cost=max_path_cost,
-                               counters=counters)
+                               counters=counters,
+                               capacity_repair=capacity_repair)
     if placer is not None and batch_solve and R > 0:
         for r, (path, cost) in enumerate(
                 _place_batch(placer, [int(s) for s in prob.sources])):
@@ -1172,7 +1218,8 @@ def _solve_dp(prob: Problem, *, include_compute: bool,
             else:
                 path, cost = _place_request(
                     spb, K, prob.profile.input_bytes, int(prob.sources[r]),
-                    mem, comp, mem_left, comp_left, compute_cost)
+                    mem, comp, mem_left, comp_left, compute_cost,
+                    capacity_repair=capacity_repair)
             if path is None or (max_path_cost is not None
                                 and cost > max_path_cost):
                 admitted[r] = False
@@ -1209,7 +1256,8 @@ def solve_ould(prob: Problem, *, solver: Solver = "ilp",
                constraint_cache: dict | None = None,
                max_path_cost: float | None = None,
                sparse_k: int | None = None,
-               batch_solve: bool = False) -> Solution:
+               batch_solve: bool = False,
+               capacity_repair: str = "halve") -> Solution:
     """Solve an OULD / OULD-MP instance.
 
     Legacy entry point (kept for one release): new code goes through the
@@ -1241,7 +1289,7 @@ def solve_ould(prob: Problem, *, solver: Solver = "ilp",
         assign, obj, admitted, stats = _solve_dp(
             prob, include_compute=include_compute,
             max_path_cost=max_path_cost, sparse_k=k,
-            batch_solve=batch_solve)
+            batch_solve=batch_solve, capacity_repair=capacity_repair)
         n_rej = int(prob.n_requests - admitted.sum())
         status = "feasible" if n_rej == 0 else f"rejected:{n_rej}"
         return Solution(assign, obj, status, time.perf_counter() - t0,
@@ -1340,6 +1388,7 @@ class IncrementalSolver:
                  max_path_cost: float | None = None,
                  rate_unit_bytes: float = 1 / 8.0,
                  sparse_k: int | None = None, batch_solve: bool = False,
+                 capacity_repair: str = "halve",
                  **ilp_kw):
         self.profile = profile
         self.mem_cap = np.asarray(mem_cap, float)
@@ -1355,6 +1404,8 @@ class IncrementalSolver:
         # Epoch re-solves route the touched-request loop through the batched
         # jitted kernel (decisions unchanged; dp-sparse only).
         self.batch_solve = batch_solve
+        # Over-capacity shrink rule for the repair loop ("halve" | "gentle").
+        self.capacity_repair = capacity_repair
         # Entry re-pricing threshold for incremental_transfer_cost; 0.0 keeps
         # the cost matrix exact (only entries with *any* drift recomputed).
         # Must not exceed rel_change: _changed_nodes reads the incrementally
@@ -1478,6 +1529,7 @@ class IncrementalSolver:
                          max_path_cost=self.max_path_cost,
                          sparse_k=self.sparse_k,
                          batch_solve=self.batch_solve,
+                         capacity_repair=self.capacity_repair,
                          **self.ilp_kw)
         spb, n_repriced = self._priced_spb(prob)
         self._remember(spb, alive, request_ids, sol.assign, sol.admitted)
@@ -1552,7 +1604,8 @@ class IncrementalSolver:
             placer = _SparsePlacer(spb, K, Ks, mem, comp, mem_left,
                                    comp_left, compute_cost, k=k,
                                    max_path_cost=self.max_path_cost,
-                                   counters=counters)
+                                   counters=counters,
+                                   capacity_repair=self.capacity_repair)
         if placer is not None and self.batch_solve and todo:
             placed = _place_batch(placer,
                                   [int(prob.sources[r]) for r in todo])
@@ -1569,7 +1622,8 @@ class IncrementalSolver:
                     path, cost = _place_request(spb, K, Ks,
                                                 int(prob.sources[r]),
                                                 mem, comp, mem_left,
-                                                comp_left, compute_cost)
+                                                comp_left, compute_cost,
+                                                capacity_repair=self.capacity_repair)
                 if path is None or (self.max_path_cost is not None
                                     and cost > self.max_path_cost):
                     continue

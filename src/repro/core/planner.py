@@ -303,6 +303,7 @@ class OuldPlanner(_PlannerBase):
                  mip_rel_gap: float = 1e-6,
                  max_path_cost: float | None = None,
                  sparse_k: int | None = None, batch_solve: bool = False,
+                 capacity_repair: str = "halve",
                  **_ignored: Any):
         self.name = name or f"ould-{solver}"
         self.view_kinds = view_kinds
@@ -310,7 +311,8 @@ class OuldPlanner(_PlannerBase):
         self._kw = dict(include_compute=include_compute, tight=tight,
                         gamma_relaxed=gamma_relaxed, time_limit=time_limit,
                         mip_rel_gap=mip_rel_gap, max_path_cost=max_path_cost,
-                        sparse_k=sparse_k, batch_solve=batch_solve)
+                        sparse_k=sparse_k, batch_solve=batch_solve,
+                        capacity_repair=capacity_repair)
         self._constraint_cache: dict = {}
 
     def plan(self, problem: Problem, view: TopologyView, *,
@@ -365,6 +367,7 @@ class IncrementalPlanner(_PlannerBase):
                  max_path_cost: float | None = None,
                  include_compute: bool = False,
                  sparse_k: int | None = None, batch_solve: bool = False,
+                 capacity_repair: str = "halve",
                  **_ignored: Any):
         self.name = name
         if view_kinds is not None:
@@ -377,6 +380,7 @@ class IncrementalPlanner(_PlannerBase):
         self.include_compute = include_compute
         self.sparse_k = sparse_k
         self.batch_solve = batch_solve
+        self.capacity_repair = capacity_repair
         self._inc: IncrementalSolver | None = None
         self._pool_key: tuple | None = None
 
@@ -394,7 +398,8 @@ class IncrementalPlanner(_PlannerBase):
                 price_rel_change=self.price_rel_change,
                 max_path_cost=self.max_path_cost,
                 rate_unit_bytes=problem.rate_unit_bytes,
-                sparse_k=self.sparse_k, batch_solve=self.batch_solve)
+                sparse_k=self.sparse_k, batch_solve=self.batch_solve,
+                capacity_repair=self.capacity_repair)
             self._pool_key = key
         return self._inc
 

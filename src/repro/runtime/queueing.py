@@ -327,6 +327,311 @@ class NodeQueues:
                             out.rejected[inv], out.degraded[inv])
 
 
+def n_path_resources(n_nodes: int) -> int:
+    """Size of the combined resource space the tandem network queues over:
+    one compute server per node plus one server per *directed* link."""
+    return n_nodes + n_nodes * n_nodes
+
+
+def link_resource(n_nodes: int, a, b):
+    """Resource id of the directed link ``a → b`` (vectorized over arrays).
+
+    Compute node ``i`` keeps id ``i``; links occupy ``N + a·N + b`` so every
+    hop of a placed path — stage walls *and* transfers — is a first-class
+    server with its own FIFO/EDF queue.
+    """
+    return n_nodes + a * n_nodes + b
+
+
+@dataclasses.dataclass(frozen=True)
+class PathOutcome:
+    """Per-frame, per-hop result of one tandem advance (caller's frame
+    order; hop axis padded — ``res < 0`` hops carry ``wait = service = 0``).
+    """
+
+    start_s: np.ndarray         # (F, H) hop service start
+    finish_s: np.ndarray        # (F, H) hop service completion
+    wait_s: np.ndarray          # (F, H) start − previous hop's finish
+    service_used_s: np.ndarray  # (F, H) 0 where padded/dropped; degraded ×f
+    done_s: np.ndarray          # (F,) last real hop's finish (inf if not)
+    lat_s: np.ndarray           # (F,) Σ_h (wait_h + service_h), hop order
+    wait_total_s: np.ndarray    # (F,) Σ_h wait_h
+    completed: np.ndarray       # (F,) bool
+    dropped: np.ndarray         # (F,) bool — reneged at some hop's head
+    rejected: np.ndarray        # (F,) bool — turned away at the first hop
+    degraded: np.ndarray        # (F,) bool — any hop served the light form
+
+
+def path_advance_kernel(res: np.ndarray, service_s: np.ndarray,
+                        arrival_s: np.ndarray, free_at_s: np.ndarray,
+                        priority: np.ndarray | None = None,
+                        ) -> tuple[np.ndarray, np.ndarray, np.ndarray]:
+    """Generalized segmented-Lindley advance over a tandem of hops.
+
+    ``res`` is ``(F, H)`` resource ids per frame and hop (compute nodes and
+    directed links share one id space, ``-1`` pads shorter paths) and
+    ``service_s`` the matching hop services.  A frame's arrival at hop
+    ``h`` is its *finish at hop h−1* (hop 0 arrives at ``arrival_s``), so
+    the whole cascade advances hop-major: for each hop level, the frames
+    holding a real hop are sorted by ``(resource, readiness)`` and pushed
+    through :func:`fifo_advance_kernel` against the running ``free_at_s``
+    of the combined resource space — H sweeps of the same O(F) vectorized
+    recursion instead of a per-frame event loop.
+
+    ``priority`` (optional, per frame) replaces readiness as the in-wave
+    serve order within a resource (EDF passes absolute deadlines).
+    Returns ``(start_s, finish_s, free_out)`` with the per-hop schedule in
+    the caller's frame order and the committed busy-until times;
+    ``free_at_s`` itself is not mutated.
+    """
+    res = np.asarray(res, np.int64)
+    service_s = np.asarray(service_s, float)
+    n_frames, n_hops = res.shape
+    start = np.zeros((n_frames, n_hops))
+    finish = np.zeros((n_frames, n_hops))
+    ready = np.asarray(arrival_s, float).copy()
+    free = np.asarray(free_at_s, float).copy()
+    for h in range(n_hops):
+        r = res[:, h]
+        valid = r >= 0
+        start[:, h] = ready
+        finish[:, h] = ready
+        if not valid.any():
+            continue
+        idx = np.flatnonzero(valid)
+        key = ready[idx] if priority is None else priority[idx]
+        order = idx[np.lexsort((idx, key, r[idx]))]
+        rs = r[order]
+        st, fin = fifo_advance_kernel(rs, ready[order],
+                                      service_s[order, h], free)
+        start[order, h] = st
+        finish[order, h] = fin
+        np.maximum.at(free, rs, fin)
+        ready[order] = fin
+    return start, finish, free
+
+
+def path_sweep_reference(res: np.ndarray, service_s: np.ndarray,
+                         arrival_s: np.ndarray, free_at_s: np.ndarray,
+                         priority: np.ndarray | None = None,
+                         ) -> tuple[np.ndarray, np.ndarray, np.ndarray]:
+    """Scalar python sweep with the identical hop-major FCFS discipline —
+    the exactness fixture (and the denominator of the S8 speedup lock)."""
+    res = np.asarray(res, np.int64)
+    service_s = np.asarray(service_s, float)
+    n_frames, n_hops = res.shape
+    start = np.zeros((n_frames, n_hops))
+    finish = np.zeros((n_frames, n_hops))
+    ready = [float(a) for a in np.asarray(arrival_s, float)]
+    free = [float(f) for f in np.asarray(free_at_s, float)]
+    for h in range(n_hops):
+        wave = [i for i in range(n_frames) if res[i, h] >= 0]
+        if priority is None:
+            wave.sort(key=lambda i: (res[i, h], ready[i], i))
+        else:
+            wave.sort(key=lambda i: (res[i, h], priority[i], i))
+        for i in range(n_frames):
+            start[i, h] = finish[i, h] = ready[i]
+        for i in wave:
+            rid = int(res[i, h])
+            st = max(ready[i], free[rid])
+            fin = st + float(service_s[i, h])
+            start[i, h] = st
+            finish[i, h] = fin
+            free[rid] = fin
+            ready[i] = fin
+    return start, finish, np.asarray(free)
+
+
+def path_policy_sweep(res: np.ndarray, service_s: np.ndarray,
+                      arrival_s: np.ndarray, deadline_abs_s: np.ndarray,
+                      free_at_s: np.ndarray, policy: ServicePolicy,
+                      ) -> tuple[np.ndarray, np.ndarray, np.ndarray, dict]:
+    """Hop-major tandem advance with the reneging overload policies.
+
+    Same hop-major wave order as :func:`path_advance_kernel` (EDF swaps the
+    in-wave key for the absolute deadline), but sequential within each wave
+    because reneging is data-dependent:
+
+    * ``reject`` — decided once at the frame's *first* real hop: if its
+      start there plus the sum of all remaining hop services (a no-wait
+      lower bound on completion) already overruns the deadline, the frame
+      never consumes any hop;
+    * ``drop``   — at any hop whose service would *start* past the
+      deadline the frame reneges and abandons the rest of its cascade;
+    * ``degrade``— any hop whose full service would finish late is served
+      at ``degrade_factor`` × its demand (the light variant of that stage
+      or transfer).
+    """
+    res = np.asarray(res, np.int64)
+    service_s = np.asarray(service_s, float)
+    n_frames, n_hops = res.shape
+    start = np.zeros((n_frames, n_hops))
+    finish = np.zeros((n_frames, n_hops))
+    used = np.zeros((n_frames, n_hops))
+    dropped = np.zeros(n_frames, bool)
+    rejected = np.zeros(n_frames, bool)
+    degraded = np.zeros(n_frames, bool)
+    started = np.zeros(n_frames, bool)
+    ready = [float(a) for a in np.asarray(arrival_s, float)]
+    free = [float(f) for f in np.asarray(free_at_s, float)]
+    remaining = np.cumsum(service_s[:, ::-1], axis=1)[:, ::-1]
+    ddl = np.asarray(deadline_abs_s, float)
+    edf = policy.discipline == "edf"
+    overload, factor = policy.overload, policy.degrade_factor
+    for h in range(n_hops):
+        for i in range(n_frames):
+            start[i, h] = finish[i, h] = ready[i]
+        wave = [i for i in range(n_frames)
+                if res[i, h] >= 0 and not dropped[i] and not rejected[i]]
+        if edf:
+            wave.sort(key=lambda i: (res[i, h], ddl[i], i))
+        else:
+            wave.sort(key=lambda i: (res[i, h], ready[i], i))
+        for i in wave:
+            rid = int(res[i, h])
+            st = max(ready[i], free[rid])
+            svc = float(service_s[i, h])
+            if overload == "reject" and not started[i]:
+                if st + float(remaining[i, h]) > ddl[i]:
+                    rejected[i] = True
+                    continue
+            if overload == "drop" and st > ddl[i]:
+                dropped[i] = True
+                start[i, h] = st        # when the head reached it
+                finish[i, h] = ready[i]
+                continue
+            if overload == "degrade" and st + svc > ddl[i]:
+                svc *= factor
+                degraded[i] = True
+            started[i] = True
+            start[i, h] = st
+            finish[i, h] = st + svc
+            used[i, h] = svc
+            free[rid] = st + svc
+            ready[i] = st + svc
+    flags = {"dropped": dropped, "rejected": rejected, "degraded": degraded,
+             "served_any": started}
+    return start, finish, used, {"free": np.asarray(free), **flags}
+
+
+class PathQueues:
+    """Persistent tandem-network state: one server per node *and* per
+    directed link, advanced one window of hop schedules at a time.
+
+    The per-hop counterpart of :class:`NodeQueues` (DESIGN.md §10): a
+    frame occupies, in order, its source uplink, each placed stage's
+    compute server, and each stage boundary's link server — waiting behind
+    cross-traffic at every hop, which is exactly the shared-relay
+    contention the bottleneck model cannot see.  ``backlog_s`` spans the
+    whole resource space so queue-aware admission can price the *summed*
+    backlog along a candidate path.
+    """
+
+    def __init__(self, n_nodes: int, policy: ServicePolicy = ServicePolicy()):
+        self.n_nodes = n_nodes
+        self.policy = policy
+        self.free_at_s = np.zeros(n_path_resources(n_nodes))
+        self.demand_s = np.zeros(n_nodes)          # compute offered load
+        self.link_demand_s = np.zeros(n_nodes * n_nodes)
+        self.n_enqueued = 0
+        self.n_completed = 0
+        self.n_dropped = 0
+        self.n_rejected = 0
+        self.n_degraded = 0
+
+    def backlog_s(self, now_s: float) -> np.ndarray:
+        """(N + N²,) expected wait at each compute/link server *now*."""
+        return np.maximum(self.free_at_s - now_s, 0.0)
+
+    def snapshot(self) -> dict:
+        return {"queue.enqueued": self.n_enqueued,
+                "queue.completed": self.n_completed,
+                "queue.dropped": self.n_dropped,
+                "queue.rejected": self.n_rejected,
+                "queue.degraded": self.n_degraded,
+                "queue.max_demand_s": float(self.demand_s.max())
+                if self.demand_s.size else 0.0,
+                "queue.max_link_demand_s": float(self.link_demand_s.max())
+                if self.link_demand_s.size else 0.0}
+
+    def advance(self, res: np.ndarray, service_s: np.ndarray,
+                arrival_s: np.ndarray,
+                deadline_abs_s: np.ndarray) -> PathOutcome:
+        """Advance the tandem network through one window of hop schedules.
+
+        ``res``/``service_s`` are ``(F, H)`` in emission order (rows are
+        frames, columns hops, ``-1`` pads).  Latency is accumulated in hop
+        order (``lat ← lat + wait_h + service_h``) so an uncontended
+        single-hop path reproduces the bottleneck model's
+        ``base + wait + service`` float-for-float.
+        """
+        res = np.asarray(res, np.int64)
+        n_frames = int(res.shape[0])
+        if n_frames == 0:
+            e2 = np.zeros((0, res.shape[1] if res.ndim == 2 else 0))
+            e1 = np.zeros(0)
+            eb = np.zeros(0, bool)
+            return PathOutcome(e2, e2.copy(), e2.copy(), e2.copy(), e1,
+                               e1.copy(), e1.copy(), eb, eb.copy(),
+                               eb.copy(), eb.copy())
+        service_s = np.asarray(service_s, float)
+        arrival_s = np.asarray(arrival_s, float)
+        deadline_abs_s = np.asarray(deadline_abs_s, float)
+        prio = deadline_abs_s if self.policy.discipline == "edf" else None
+        if self.policy.overload == "none":
+            start, finish, free = path_advance_kernel(
+                res, service_s, arrival_s, self.free_at_s, prio)
+            used = np.where(res >= 0, service_s, 0.0)
+            completed = np.ones(n_frames, bool)
+            eb = np.zeros(n_frames, bool)
+            dropped, rejected, degraded = eb, eb.copy(), eb.copy()
+        else:
+            start, finish, used, info = path_policy_sweep(
+                res, service_s, arrival_s, deadline_abs_s, self.free_at_s,
+                self.policy)
+            free = info["free"]
+            dropped, rejected = info["dropped"], info["rejected"]
+            degraded = info["degraded"]
+            completed = ~dropped & ~rejected
+        self.free_at_s = np.maximum(self.free_at_s, free)
+
+        prev = np.concatenate([arrival_s[:, None], finish[:, :-1]], axis=1)
+        # No clipping at 0: the segmented cummax can land a start an ulp
+        # below its arrival, and the bottleneck model keeps that sign —
+        # preserving it is what makes single-hop tapes bit-identical.
+        wait = np.where(res >= 0, start - prev, 0.0)
+        lat = np.zeros(n_frames)
+        wait_total = np.zeros(n_frames)
+        for h in range(res.shape[1]):
+            lat = lat + wait[:, h] + used[:, h]
+            wait_total = wait_total + wait[:, h]
+        last_real = np.where((res >= 0).any(axis=1),
+                             res.shape[1] - 1 -
+                             np.argmax((res >= 0)[:, ::-1], axis=1), 0)
+        done = finish[np.arange(n_frames), last_real]
+        done = np.where(completed, done, np.inf)
+        lat = np.where(completed, lat, np.inf)
+
+        node_hops = (res >= 0) & (res < self.n_nodes)
+        link_hops = res >= self.n_nodes
+        self.demand_s += np.bincount(
+            res[node_hops], weights=service_s[node_hops],
+            minlength=self.n_nodes)
+        if link_hops.any():
+            self.link_demand_s += np.bincount(
+                res[link_hops] - self.n_nodes,
+                weights=service_s[link_hops],
+                minlength=self.n_nodes * self.n_nodes)
+        self.n_enqueued += n_frames
+        self.n_completed += int(completed.sum())
+        self.n_dropped += int(dropped.sum())
+        self.n_rejected += int(rejected.sum())
+        self.n_degraded += int(degraded.sum())
+        return PathOutcome(start, finish, wait, used, done, lat, wait_total,
+                           completed, dropped, rejected, degraded)
+
+
 def tail_percentiles(latencies: np.ndarray) -> dict[str, float]:
     """p50/p99/p999 of a latency sample (inf-guarded, empty ⇒ inf) — the
     tail metrics the ROADMAP's production-traffic goal is judged on."""

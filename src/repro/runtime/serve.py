@@ -77,9 +77,17 @@ class AdmissionController:
     """
 
     def __init__(self, planner: Planner | str = "incremental",
-                 tracer=None, **planner_options):
+                 tracer=None, queue_model: str = "bottleneck",
+                 **planner_options):
         self.planner: Planner = (get_planner(planner, **planner_options)
                                  if isinstance(planner, str) else planner)
+        # Which queueing substrate the backlog vector prices ("bottleneck":
+        # (N,) per-node waits, gate at the heaviest stage's host; "perhop":
+        # (N+N²,) per-server waits over compute nodes and directed links,
+        # gate on the *summed* backlog along the whole candidate path).
+        if queue_model not in ("bottleneck", "perhop"):
+            raise ValueError(f"unknown queue_model {queue_model!r}")
+        self.queue_model = queue_model
         # Observability (repro.obs): solver spans + admission verdicts are
         # emitted per round when a real Tracer is attached; the NullTracer
         # default keeps this path free.
@@ -174,9 +182,31 @@ class AdmissionController:
         comp = np.asarray(plan.problem.profile.compute_vector(), float)
         speed = plan.problem.compute_speed
         assign = plan.assign.copy()
+        n_nodes = plan.problem.n_nodes
+        sources = plan.problem.sources
         gated = 0
         for r in np.flatnonzero(admitted):
             path = assign[r]
+            if self.queue_model == "perhop":
+                # Sum the backlog over every server the candidate path
+                # occupies: source uplink, each stage's compute node, and
+                # each stage boundary's directed link (queueing.link_resource
+                # id layout) — the tandem network's whole expected wait.
+                src = int(sources[r])
+                first = int(path[0])
+                total = backlog_s[first] if first == src else (
+                    backlog_s[n_nodes + src * n_nodes + first]
+                    + backlog_s[first])
+                for j in range(path.shape[0] - 1):
+                    a, b = int(path[j]), int(path[j + 1])
+                    if a != b:
+                        total += (backlog_s[n_nodes + a * n_nodes + b]
+                                  + backlog_s[b])
+                if per_req[r] + total > deadline[r]:
+                    admitted[r] = False
+                    assign[r] = -1
+                    gated += 1
+                continue
             # bottleneck node = host of the largest stage wall on the path
             best_w, best_node, cur, w = -1.0, int(path[0]), int(path[0]), 0.0
             for j in range(path.shape[0]):

@@ -83,7 +83,8 @@ from ..core.profiles import ModelProfile, lenet_profile
 from ..core.radio import RadioParams, rate_matrix
 from ..obs import (FRAMES, LATENCY_EDGES_S, NULL_TRACER, QUEUE,
                    MetricsRegistry)
-from .queueing import DeadlineClass, NodeQueues, ServicePolicy
+from .queueing import (DeadlineClass, NodeQueues, PathQueues, ServicePolicy,
+                       link_resource)
 from .serve import AdmissionController
 
 # Canonical registry names for the scenario matrix.
@@ -126,6 +127,26 @@ class SwarmScenario:
     # Epoch admission prices queue backlog (expected wait at the placed
     # node) into the bar, not just path cost (AdmissionController).
     queue_aware_admission: bool = False
+    # Queueing substrate (DESIGN.md §10): "perhop" (default) queues a frame
+    # at *every* server on its placed path — source uplink, each stage's
+    # compute node, each boundary's directed link — so cross-traffic on
+    # shared relays is priced into waits; "bottleneck" is the PR-6
+    # compatibility mode (one queue at the heaviest stage's host, the rest
+    # of the path deterministic), pinned bit-identical.
+    queue_model: str = "perhop"
+    # Drift-triggered re-placement: when set, every non-epoch tick checks
+    # the kept placements' mean drift from their slack-capacity DP optimum
+    # (core.ould.placement_drift) and fires an extra epoch re-solve when it
+    # exceeds this many seconds (SimResult.drift_resolves counts them).
+    # None (default) keeps the fixed-epoch cadence untouched.
+    resolve_on_drift: float | None = None
+    # Capacity-repair rule for the single-request DP's over-capacity loop
+    # ("halve": the PR-1 rule, shrink the busiest node's advertised
+    # capacity by 2× — can zero a node that still fit one layer; "gentle":
+    # shrink to load − min hosted layer demand, excluding as little as
+    # possible — admits strictly more under contention).  Default
+    # unchanged so dense baselines stay pinned.
+    capacity_repair: str = "halve"
     mtbf_s: float = float("inf")   # churn off by default
     mttr_s: float = 30.0
     rel_change: float = 0.05       # incremental-solver link-drift threshold
@@ -303,6 +324,7 @@ class SimResult:
     transport: str = "inproc"
     link_bytes_per_s: dict = dataclasses.field(default_factory=dict)
     warm_starts: int = 0         # churn-rejoin warm_start invocations
+    drift_resolves: int = 0      # re-solves fired by resolve_on_drift
     # MetricsRegistry.snapshot() of the run: every layer's telemetry
     # (sim.* counters, queue.* tallies, solver.* aggregates, the latency
     # histogram, transport link gauges) behind one dict — DESIGN.md §9.
@@ -490,11 +512,14 @@ class _PlacementTable:
     ``base + service == uncontended latency`` exactly."""
 
     def __init__(self, comp: np.ndarray, speed: np.ndarray,
-                 deadline_of: np.ndarray, measure=None):
+                 deadline_of: np.ndarray, measure=None,
+                 k_bytes: np.ndarray | None = None, perhop: bool = False):
         self._comp = comp                    # (M,) FLOPs per layer
         self._speed = speed                  # (N,) FLOPs/s
         self._deadline_of = deadline_of      # (n_classes,) seconds
         self._measure = measure              # executed-mode stage wall lookup
+        self._k_bytes = k_bytes              # (M,) boundary bytes per layer
+        self._perhop = perhop                # also build full hop schedules
         self.clear()
 
     def clear(self) -> None:
@@ -507,6 +532,13 @@ class _PlacementTable:
         self.q_node = np.zeros(0, np.int64)
         self.service_s = np.zeros(0)
         self.comp_s = np.zeros(0)
+        # Hop schedule (perhop mode): per stream, the ordered stages of its
+        # placed path — stage_node[s, k] hosts stage k for stage_wall[s, k]
+        # seconds, bound_bytes[s, k] bytes cross the (k → k+1) boundary.
+        # -1 / 0 pad rows with fewer stages.
+        self.stage_node = np.zeros((0, 1), np.int64)
+        self.stage_wall = np.zeros((0, 1))
+        self.bound_bytes = np.zeros((0, 1))
 
     def rebuild(self, placed: dict[int, np.ndarray],
                 streams: dict[int, "StreamRequest"]) -> None:
@@ -527,6 +559,9 @@ class _PlacementTable:
             self.q_node = np.zeros(0, np.int64)
             self.service_s = np.zeros(0)
             self.comp_s = np.zeros(0)
+            self.stage_node = np.zeros((0, 1), np.int64)
+            self.stage_wall = np.zeros((0, 1))
+            self.bound_bytes = np.zeros((0, 1))
             return
         if self._measure is None:
             per_layer = self._comp[None, :] / self._speed[self.path]
@@ -543,16 +578,49 @@ class _PlacementTable:
             self.service_s = per_layer_stage[np.arange(S), j_star]
             self.q_node = self.path[np.arange(S), j_star]
             self.comp_s = per_layer.sum(axis=1)
+            if self._perhop:
+                rows_b = np.broadcast_to(rows, (S, M))
+                s_max = int(stage_id[:, -1].max()) + 1
+                sn = np.full((S, s_max), -1, np.int64)
+                sn[rows_b, stage_id] = self.path
+                # Same np.add.at accumulation order as stage_sum above, so
+                # stage walls are float-identical to the bottleneck table's.
+                sw = np.zeros((S, s_max))
+                np.add.at(sw, (rows_b, stage_id), per_layer)
+                bb = np.zeros((S, s_max))
+                b_mask = self.path[:, 1:] != self.path[:, :-1]
+                bb[rows_b[:, :-1][b_mask], stage_id[:, :-1][b_mask]] = \
+                    np.broadcast_to(self._k_bytes[None, :-1],
+                                    (S, M - 1))[b_mask]
+                self.stage_node, self.stage_wall = sn, sw
+                self.bound_bytes = bb
         else:                               # executed mode: measured walls
             q_node = np.zeros(S, np.int64)
             service = np.zeros(S)
             comp_s = np.zeros(S)
+            stage_rows = []
             for row in range(S):
+                stages = to_stages(self.path[row])
                 walls = [(self._measure(st.layer_start, st.layer_end),
-                          st.node) for st in to_stages(self.path[row])]
+                          st.node) for st in stages]
                 comp_s[row] = sum(w for w, _ in walls)
                 service[row], q_node[row] = max(walls)
+                stage_rows.append([(st.node, w, st.layer_end)
+                                   for (w, _), st in zip(walls, stages)])
             self.q_node, self.service_s, self.comp_s = q_node, service, comp_s
+            if self._perhop:
+                s_max = max(len(sr) for sr in stage_rows)
+                sn = np.full((S, s_max), -1, np.int64)
+                sw = np.zeros((S, s_max))
+                bb = np.zeros((S, s_max))
+                for row, sr in enumerate(stage_rows):
+                    for k, (node, wall, layer_end) in enumerate(sr):
+                        sn[row, k] = node
+                        sw[row, k] = wall
+                        if k + 1 < len(sr):
+                            bb[row, k] = self._k_bytes[layer_end - 1]
+                self.stage_node, self.stage_wall = sn, sw
+                self.bound_bytes = bb
 
     def active_rows(self, tick: int) -> np.ndarray:
         return np.flatnonzero((self.arrive <= tick) & (tick < self.depart))
@@ -600,13 +668,19 @@ class _Simulation:
         self.comp = np.asarray(profile.compute_vector())
         self.deadline_of = np.array([c.deadline_s for c in scn.classes()])
 
+        if scn.queue_model not in ("perhop", "bottleneck"):
+            raise ValueError(f"unknown queue_model {scn.queue_model!r}; "
+                             "one of ('perhop', 'bottleneck')")
+        self.perhop = scn.queue_model == "perhop"
         self.ctrl = AdmissionController(policy, solver="dp",
                                         warm=not cold_resolves,
                                         rel_change=scn.rel_change,
                                         max_path_cost=scn.max_path_cost_s,
                                         sparse_k=scn.sparse_k,
                                         batch_solve=scn.batch_solve,
-                                        tracer=self.trace)
+                                        capacity_repair=scn.capacity_repair,
+                                        tracer=self.trace,
+                                        queue_model=scn.queue_model)
         self.wants_horizon = getattr(self.ctrl.planner, "preferred_view",
                                      "snapshot") == "horizon"
         self.degradation = _parse_degradation(scn.view_degradation)
@@ -622,8 +696,10 @@ class _Simulation:
         self.measure = measure
         self.warm_starts = 0         # churn-rejoin warm_start invocations
         self.table = _PlacementTable(self.comp, self.speed, self.deadline_of,
-                                     measure)
-        self.queues = NodeQueues(scn.n_uavs,
+                                     measure, k_bytes=self.K,
+                                     perhop=self.perhop)
+        queues_cls = PathQueues if self.perhop else NodeQueues
+        self.queues = queues_cls(scn.n_uavs,
                                  ServicePolicy.parse(scn.service_policy))
 
         # mutable run state
@@ -639,6 +715,7 @@ class _Simulation:
         self.dropped = self.degraded = self.frames_rejected = 0
         self.wait_total_s = 0.0
         self._solver_jit_compiles = 0
+        self.drift_resolves = 0
 
     # -- epoch layer --------------------------------------------------------
     def _build_view(self, tick: int):
@@ -711,13 +788,39 @@ class _Simulation:
             self.ctrl.last_queue_rejected,
             drift_total_s=drift_total, drift_max_s=drift_max))
 
+    def _maybe_drift_resolve(self, t: int) -> None:
+        """Drift-triggered re-placement (``resolve_on_drift``): on non-epoch
+        ticks, re-solve early when the kept placements' mean drift from
+        their slack-capacity DP optimum (judged on the realized snapshot)
+        exceeds the threshold — the improvement-bound hook promoted from
+        measuring the keep rule's cost to acting on it."""
+        scn = self.scn
+        if (scn.resolve_on_drift is None or not self.placed
+                or t % scn.epoch_ticks == 0):
+            return
+        ids = sorted(self.placed)
+        assign = np.stack([self.placed[i] for i in ids])
+        sources = np.array([self.streams[i].source for i in ids], np.int64)
+        prob = SnapshotView(self.rates_t[t], self.alive.copy()).bind(
+            Problem(self.profile, self.mem_cap, self.comp_cap,
+                    self.rates_t[t], sources, self.speed))
+        drift = placement_drift(prob, assign, np.ones(len(ids), bool),
+                                sparse_k=scn.sparse_k)
+        if float(drift.mean()) > scn.resolve_on_drift:
+            self.drift_resolves += 1
+            self.on_epoch(t)
+
     # -- serve layer (vectorized frame emission) ----------------------------
     def on_tick(self, t: int) -> None:
+        self._maybe_drift_resolve(t)
         if self._dirty:
             self.table.rebuild(self.placed, self.streams)
             self._dirty = False
         rows = self.table.active_rows(t)
         if rows.size == 0:
+            return
+        if self.perhop:
+            self._on_tick_perhop(t, rows)
             return
         tab, K, Ks = self.table, self.K, self.Ks
         spb_t = _spb(_masked(self.rates_t[t], self.alive))
@@ -758,11 +861,93 @@ class _Simulation:
         if self.trace.enabled:
             self._pending["ids"] = tab.ids[r]
 
+    def _on_tick_perhop(self, t: int, rows: np.ndarray) -> None:
+        """Per-hop frame emission: instead of one ``(base, service)`` pair,
+        each frame carries its full hop schedule — source uplink, each
+        stage's compute server, each boundary's directed link — resources
+        and services aligned as ``(F, 2·S_max)`` arrays for the tandem
+        kernel (hop 0 = uplink; hop 2k+1 = stage k; hop 2k+2 = boundary
+        k → k+1; ``res = -1`` pads)."""
+        tab, Ks, scn = self.table, self.Ks, self.scn
+        n = scn.n_uavs
+        spb_t = _spb(_masked(self.rates_t[t], self.alive))
+        src, path = tab.src[rows], tab.path[rows]
+        outage = ~self.alive[src] | (~self.alive[path]).any(axis=1)
+
+        sn = tab.stage_node[rows]
+        sw = tab.stage_wall[rows]
+        bb = tab.bound_bytes[rows]
+        n_frames, s_max = sn.shape
+        res = np.full((n_frames, 2 * s_max), -1, np.int64)
+        svc = np.zeros((n_frames, 2 * s_max))
+        first = sn[:, 0]
+        has_up = first != src
+        with np.errstate(invalid="ignore"):
+            up_s = np.where(has_up, Ks * spb_t[src, first], 0.0)
+            res[:, 0] = np.where(has_up, link_resource(n, src, first), -1)
+            svc[:, 0] = up_s
+            link_bad = ~np.isfinite(up_s)
+            for k in range(s_max):
+                node = sn[:, k]
+                valid = node >= 0
+                res[:, 2 * k + 1] = np.where(valid, node, -1)
+                svc[:, 2 * k + 1] = np.where(valid, sw[:, k], 0.0)
+                if k + 1 < s_max:
+                    nxt = sn[:, k + 1]
+                    hop_ok = nxt >= 0
+                    a = np.where(valid, node, 0)
+                    b = np.where(hop_ok, nxt, 0)
+                    l_s = np.where(hop_ok, bb[:, k] * spb_t[a, b], 0.0)
+                    res[:, 2 * k + 2] = np.where(hop_ok,
+                                                 link_resource(n, a, b), -1)
+                    svc[:, 2 * k + 2] = l_s
+                    link_bad |= ~np.isfinite(l_s)
+        outage |= link_bad
+
+        self.served += rows.size
+        n_out = int(outage.sum())
+        self.outages += n_out
+        self.missed += n_out                 # inf > any deadline
+        if self.trace.enabled and n_out:
+            self.trace.instant_batch(
+                FRAMES, "outage", np.full(n_out, t * scn.tick_s),
+                lane=src[outage], frame=tab.ids[rows[outage]])
+        ok = ~outage
+        if not ok.any():
+            return
+        r = rows[ok]
+        arrival = np.full(r.size, t * scn.tick_s)
+        self._pending = {
+            "res": res[ok], "svc": svc[ok], "arrival": arrival,
+            "deadline_abs": arrival + tab.deadline_s[r],
+            "node": tab.q_node[r],
+        }
+        if self.trace.enabled:
+            self._pending["ids"] = tab.ids[r]
+
     # -- queue layer (completion accounting) --------------------------------
     def on_queue_advance(self, t: int) -> None:
         if self._pending is None:
             return
         p, self._pending = self._pending, None
+        if self.perhop:
+            out = self.queues.advance(p["res"], p["svc"], p["arrival"],
+                                      p["deadline_abs"])
+            self.dropped += int(out.dropped.sum())
+            self.frames_rejected += int(out.rejected.sum())
+            self.degraded += int(out.degraded.sum())
+            done = out.completed
+            if done.any():
+                lat = out.lat_s[done]
+                self.wait_total_s += float(out.wait_total_s[done].sum())
+                self.missed += int((lat > p["deadline_abs"][done]
+                                    - p["arrival"][done]).sum())
+                finite = lat[np.isfinite(lat)]
+                if finite.size:
+                    self._lat_chunks.append(finite)
+            if self.trace.enabled:
+                self._trace_path_outcome(p, out)
+            return
         out = self.queues.advance(p["node"], p["arrival"], p["service"],
                                   p["deadline_abs"])
         self.dropped += int(out.dropped.sum())
@@ -798,6 +983,47 @@ class _Simulation:
                           lane=ln, frame=fr)
             tr.span_batch(FRAMES, "frame", a, lat, lane=ln, frame=fr,
                           a0=p["base"][done], a1=sv)
+        for name, mask in (("drop", out.dropped),
+                           ("reject_queue", out.rejected)):
+            if mask.any():
+                tr.instant_batch(FRAMES, name, arr[mask], lane=node[mask],
+                                 frame=ids[mask])
+
+    def _trace_path_outcome(self, p: dict, out) -> None:
+        """Per-hop spans reconstructed post hoc from the tandem kernel
+        outputs (DESIGN.md §10): every real hop of a completed frame emits
+        a ``hop_wait`` span (previous hop's finish → this hop's service
+        start) plus a ``hop_service`` (compute hop) or ``link`` (transfer
+        hop) span.  Audit algebra: ``frame.dur == Σ hop_wait.dur +
+        Σ hop_service.dur + Σ link.dur`` per frame id."""
+        tr, ids, arr = self.trace, p["ids"], p["arrival"]
+        res, node = p["res"], p["node"]
+        done = out.completed
+        n = self.scn.n_uavs
+        if done.any():
+            tr.span_batch(FRAMES, "frame", arr[done], out.lat_s[done],
+                          lane=node[done], frame=ids[done],
+                          a0=out.wait_total_s[done],
+                          a1=out.lat_s[done] - out.wait_total_s[done])
+            for h in range(res.shape[1]):
+                real = done & (res[:, h] >= 0)
+                if not real.any():
+                    continue
+                is_link = real & (res[:, h] >= n)
+                is_node = real & ~is_link
+                st = out.start_s[:, h]
+                w = out.wait_s[:, h]
+                sv = out.service_used_s[:, h]
+                tr.span_batch(QUEUE, "hop_wait", st[real] - w[real],
+                              w[real], lane=res[real, h], frame=ids[real])
+                if is_node.any():
+                    tr.span_batch(QUEUE, "hop_service", st[is_node],
+                                  sv[is_node], lane=res[is_node, h],
+                                  frame=ids[is_node])
+                if is_link.any():
+                    tr.span_batch(QUEUE, "link", st[is_link], sv[is_link],
+                                  lane=res[is_link, h] - n,
+                                  frame=ids[is_link])
         for name, mask in (("drop", out.dropped),
                            ("reject_queue", out.rejected)):
             if mask.any():
@@ -879,6 +1105,7 @@ class _Simulation:
                          else "inproc",
                          link_bytes_per_s=link_bw,
                          warm_starts=self.warm_starts,
+                         drift_resolves=self.drift_resolves,
                          metrics=self.metrics.snapshot())
 
     def _fill_metrics(self, lats: np.ndarray, link_bw: dict) -> None:
@@ -903,7 +1130,8 @@ class _Simulation:
                         ("solver.queue_rejected",
                          sum(e.n_queue_rejected for e in self.epochs)),
                         ("solver.jit_compiles", self._solver_jit_compiles),
-                        ("solver.warm_starts", self.warm_starts)):
+                        ("solver.warm_starts", self.warm_starts),
+                        ("solver.drift_resolves", self.drift_resolves)):
             m.counter(name).inc(v)
         m.gauge("sim.wait_total_s").set(self.wait_total_s)
         m.gauge("solver.total_solve_s").set(

@@ -18,7 +18,8 @@ from __future__ import annotations
 
 import numpy as np
 
-from .base import LinkStats, ShipResult, Transport, TransportBase
+from .base import (LinkStats, ShipResult, Transport, TransportBase,
+                   WorkerStats)
 from .inproc import InProcTransport
 from .loopback import LoopbackTransport
 from .multiproc import MultiProcTransport
@@ -43,5 +44,6 @@ def make_transport(name: str, *, n_workers: int = 2,
 __all__ = [
     "InProcTransport", "LinkStats", "LoopbackTransport", "MultiProcTransport",
     "ShipResult", "TRANSPORTS", "Transport", "TransportBase",
+    "WorkerStats",
     "make_transport",
 ]

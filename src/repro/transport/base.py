@@ -52,6 +52,17 @@ class LinkStats:
         return self.wall_s / self.nbytes if self.nbytes > 0 else 0.0
 
 
+@dataclasses.dataclass
+class WorkerStats:
+    """Accumulated worker-side timing for one worker process, as reported
+    in OP_REPLY headers: seconds draining payloads off the socket and
+    seconds in the echo/device hop (durations, worker clock)."""
+
+    n: int = 0
+    recv_s: float = 0.0
+    echo_s: float = 0.0
+
+
 @runtime_checkable
 class Transport(Protocol):
     """A byte-moving backend the engine can route transfers through."""
@@ -83,6 +94,10 @@ class TransportBase:
         self._tracer = tracer if tracer is not None else NULL_TRACER
         if self._tracer.enabled:
             self._tracer.intern("ship", "nbytes", "bytes_per_s")
+            # Worker-process backends emit these on the per-worker
+            # "transport_worker" track (lane = worker index).
+            self._tracer.intern("worker_recv", "recv_s")
+            self._tracer.intern("worker_echo", "echo_s")
 
     def _record(self, src: int, dst: int, nbytes: int, wall_s: float) -> None:
         ls = self.link_stats.setdefault((src, dst), LinkStats())

@@ -31,9 +31,9 @@ from pathlib import Path
 import jax
 import numpy as np
 
-from .base import ShipResult, TransportBase
-from .worker import (OP_HELLO, OP_QUIT, OP_REPLY, OP_SHIP, recv_frame,
-                     send_frame)
+from .base import ShipResult, TransportBase, WorkerStats
+from .worker import (OP_HELLO, OP_QUIT, OP_REPLY, OP_SHIP, REPLY_TIMES,
+                     recv_frame, send_frame)
 
 
 class LoopbackTransport(TransportBase):
@@ -53,6 +53,9 @@ class LoopbackTransport(TransportBase):
         self._conns: list[socket.socket] = []
         self.worker_pids: list[int] = []
         self.worker_backends: list[str | None] = []
+        # Worker-side timing shipped back in every OP_REPLY header,
+        # accumulated per worker index (the obs per-worker track's source).
+        self.worker_stats: dict[int, WorkerStats] = {}
 
     # -- lifecycle -----------------------------------------------------------
     @property
@@ -118,18 +121,40 @@ class LoopbackTransport(TransportBase):
     def ship(self, src_node: int, dst_node: int, array) -> ShipResult:
         if not self.started:
             self.start()
-        conn = self._conns[self.worker_of(dst_node)]
+        worker = self.worker_of(dst_node)
+        conn = self._conns[worker]
         t0 = time.perf_counter()
         host = np.ascontiguousarray(np.asarray(jax.block_until_ready(array)))
         payload = host.tobytes()
         send_frame(conn, OP_SHIP, payload)
-        op, echoed = recv_frame(conn)
-        if op != OP_REPLY or len(echoed) != len(payload):
+        op, reply = recv_frame(conn)
+        if op != OP_REPLY or len(reply) != len(payload) + REPLY_TIMES.size:
             raise ConnectionError(
-                f"transport worker returned {op!r}/{len(echoed)}B "
+                f"transport worker returned {op!r}/{len(reply)}B "
                 f"for a {len(payload)}B shipment")
-        out = np.frombuffer(echoed, dtype=host.dtype).reshape(host.shape)
+        recv_s, echo_s = REPLY_TIMES.unpack_from(reply)
+        out = np.frombuffer(reply, dtype=host.dtype,
+                            offset=REPLY_TIMES.size).reshape(host.shape)
         wall = time.perf_counter() - t0
         self._record(src_node, dst_node, len(payload), wall)
+        self._record_worker(worker, recv_s, echo_s)
         self.moved_bytes += len(payload)
         return ShipResult(out, len(payload), wall, moved=True)
+
+    def _record_worker(self, worker: int, recv_s: float,
+                       echo_s: float) -> None:
+        ws = self.worker_stats.setdefault(worker, WorkerStats())
+        ws.n += 1
+        ws.recv_s += recv_s
+        ws.echo_s += echo_s
+        if self._tracer.enabled:
+            # The worker reports durations only (no shared clock); tail-
+            # align against our receive time: the echo ended just before
+            # the reply hit our socket, the drain just before the echo.
+            tr = self._tracer
+            now = tr.now()
+            track = tr.track("transport_worker")
+            tr.span(track, "worker_recv", now - echo_s - recv_s, recv_s,
+                    lane=worker, a0=recv_s)
+            tr.span(track, "worker_echo", now - echo_s, echo_s,
+                    lane=worker, a0=echo_s)

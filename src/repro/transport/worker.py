@@ -15,9 +15,17 @@ op      meaning
 ======  =====================================================================
 ``H``   worker → parent hello on connect: JSON ``{"pid": …, "backend": …}``
 ``S``   parent → worker: ship this buffer to the worker's node
-``R``   worker → parent: the shipped buffer, back from the worker's memory
+``R``   worker → parent: a 16-byte timing header (``<2d``: seconds the
+        worker spent draining the payload off the socket, seconds in the
+        echo/device hop) followed by the shipped buffer, back from the
+        worker's memory
 ``Q``   parent → worker: shut down (no reply)
 ======  =====================================================================
+
+The ``R`` timing header is what lets the parent reconstruct *worker-side*
+spans (``worker_recv``/``worker_echo`` on the ``transport_worker`` track):
+the worker has no shared clock with the parent, so it reports durations and
+the parent tail-aligns them against its own receive time.
 
 In ``--jax`` mode (:class:`MultiProcTransport`) the worker is a real JAX
 process: each shipped buffer is put on the worker's default device before
@@ -34,8 +42,12 @@ import os
 import socket
 import struct
 import sys
+import time
 
 _LEN = struct.Struct("<Q")
+# OP_REPLY timing header: (recv_s, echo_s) — durations, not timestamps
+# (worker and parent clocks are unrelated; the parent tail-aligns).
+REPLY_TIMES = struct.Struct("<2d")
 
 OP_HELLO = b"H"
 OP_SHIP = b"S"
@@ -103,12 +115,23 @@ def serve(host: str, port: int, *, use_jax: bool) -> None:
     send_frame(sock, OP_HELLO, hello)
     try:
         while True:
-            op, payload = recv_frame(sock)
+            # Header first, payload timed separately: the blocking wait for
+            # the *next* request is idle time and must not be charged to
+            # recv_s (only the drain of an announced payload is).
+            head = recv_exact(sock, 1 + _LEN.size)
+            op, (n,) = head[:1], _LEN.unpack(head[1:])
             if op == OP_SHIP:
-                send_frame(sock, OP_REPLY, _echo(payload, device_put))
+                t0 = time.perf_counter()
+                payload = recv_exact(sock, n) if n else b""
+                t1 = time.perf_counter()
+                echoed = _echo(payload, device_put)
+                t2 = time.perf_counter()
+                send_frame(sock, OP_REPLY,
+                           REPLY_TIMES.pack(t1 - t0, t2 - t1) + echoed)
             elif op == OP_QUIT:
                 return
             else:
+                payload = recv_exact(sock, n) if n else b""
                 raise ValueError(f"transport worker: unknown op {op!r}")
     except ConnectionError:
         pass        # parent died or closed; nothing left to serve

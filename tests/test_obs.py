@@ -182,8 +182,10 @@ def test_traced_off_path_bit_identical():
 def test_latency_breakdown_audit(policy, fate):
     """Span algebra ``frame.dur == base + wait + service`` for every
     completion, and event conservation vs SimResult: every served frame
-    ends as exactly one of outage / completion span / drop / reject."""
-    scn = dataclasses.replace(OVERLOAD, service_policy=policy)
+    ends as exactly one of outage / completion span / drop / reject.
+    Bottleneck mode — the per-hop twin audits the tandem spans below."""
+    scn = dataclasses.replace(OVERLOAD, service_policy=policy,
+                              queue_model="bottleneck")
     tr = Tracer(1 << 18)
     r = simulate(scn, "nearest", seed=1, tracer=tr)
     assert getattr(r, fate) > 0 and r.outages > 0    # the fates all occur
@@ -209,6 +211,41 @@ def test_latency_breakdown_audit(policy, fate):
     assert r.metrics["sim.served"] == r.served
     assert r.metrics["queue.dropped"] == r.dropped
     assert r.metrics["sim.latency_s"]["count"] == r.latencies.size
+
+
+def test_perhop_latency_breakdown_audit():
+    """Per-hop event conservation (the tandem-network twin of the audit
+    above): every completed frame's duration decomposes into its hop
+    spans — ``frame.dur == Σ hop_wait + Σ hop_service + Σ link`` grouped
+    per frame id — and the fate counts still conserve vs SimResult."""
+    tr = Tracer(1 << 19)
+    r = simulate(OVERLOAD, "nearest", seed=1, tracer=tr)
+    assert tr.n_dropped == 0
+    f = tr.select("frame")
+    assert f["ts"].size == r.latencies.size
+    np.testing.assert_allclose(np.sort(f["dur"]), np.sort(r.latencies))
+    # a0/a1 carry the wait/work split: they must re-sum to the duration
+    np.testing.assert_allclose(f["dur"], f["a0"] + f["a1"], atol=1e-9)
+
+    # A stream serves one frame per tick, so frame ids repeat across
+    # windows — conservation is audited per *stream*: the summed hop spans
+    # of each id must equal its summed frame durations.
+    hops: dict[int, float] = {}
+    for name in ("hop_wait", "hop_service", "link"):
+        ev = tr.select(name)
+        assert ev["ts"].size > 0                 # all three families emitted
+        for fr, dur in zip(ev["frame"], ev["dur"]):
+            hops[int(fr)] = hops.get(int(fr), 0.0) + float(dur)
+    frames: dict[int, float] = {}
+    for fr, dur in zip(f["frame"], f["dur"]):
+        frames[int(fr)] = frames.get(int(fr), 0.0) + float(dur)
+    assert set(hops) == set(frames)
+    for fr, tot in frames.items():
+        assert hops[fr] == pytest.approx(tot, abs=1e-6)
+
+    n_out = tr.select("outage")["ts"].size
+    assert n_out == r.outages
+    assert r.served == n_out + f["ts"].size + r.dropped + r.frames_rejected
 
 
 def test_trace_carries_churn_and_epoch_solves(tmp_path):

@@ -136,3 +136,53 @@ def test_mobility_rates_deterministic():
     a = mob.predicted_rates(3, seed=7)
     b = RPGMobility(RPGParams(n_uavs=5), seed=42).predicted_rates(3, seed=7)
     np.testing.assert_allclose(a, b)
+
+
+# ---------------------------------------------------------------------------
+# capacity repair rules
+# ---------------------------------------------------------------------------
+
+def _contended_problem():
+    """Three ~equal requests over caps where the halving repair's geometric
+    overshoot excludes placements the gentle rule keeps reachable."""
+    layers = tuple(LayerProfile(f"l{j}", m, 5.0, o) for j, (m, o) in
+                   enumerate([(14.0, 6.0), (15.0, 2.0), (14.0, 2.0)]))
+    prof = ModelProfile("toy", layers, input_bytes=16.0)
+    rng = np.random.default_rng(0)
+    pos = rng.uniform(0, 80, (3, 3))
+    pos[:, 2] = 50.0
+    return Problem(prof, np.array([50.0, 31.0, 39.0]), np.full(3, 1e9),
+                   rate_matrix(pos), np.array([1, 2, 0], np.int64))
+
+
+def test_gentle_repair_admits_strictly_more_under_contention():
+    """`capacity_repair="gentle"` sheds `load − min hosted layer` (with a
+    largest-layer peel when that cannot strictly shrink) instead of halving
+    — on this crafted contention scenario it admits strictly more requests,
+    while the default stays the pinned halving rule."""
+    prob = _contended_problem()
+    halve = solve_ould(prob, solver="dp")
+    default = solve_ould(prob, solver="dp", capacity_repair="halve")
+    gentle = solve_ould(prob, solver="dp", capacity_repair="gentle")
+    np.testing.assert_array_equal(halve.assign, default.assign)
+    assert int(gentle.admitted.sum()) > int(halve.admitted.sum())
+    # gentle's extra admissions still respect the joint per-node load
+    mem = np.asarray(prob.profile.memory_vector())
+    load = np.zeros(prob.n_nodes)
+    for r in range(prob.n_requests):
+        if gentle.admitted[r]:
+            for j, i in enumerate(gentle.assign[r]):
+                load[i] += mem[j]
+    assert (load <= prob.mem_cap + 1e-9).all()
+
+
+def test_capacity_repair_validated_and_threads_through_solvers():
+    prob = _contended_problem()
+    with pytest.raises(ValueError, match="capacity_repair"):
+        solve_ould(prob, solver="dp", capacity_repair="nope")
+    from repro.core import IncrementalSolver
+    inc = IncrementalSolver(prob.profile, prob.mem_cap, prob.comp_cap,
+                            solver="dp", capacity_repair="gentle")
+    sol, _ = inc.solve(prob.rates, prob.sources)
+    gentle = solve_ould(prob, solver="dp", capacity_repair="gentle")
+    assert int(sol.admitted.sum()) == int(gentle.admitted.sum())

@@ -362,10 +362,13 @@ def test_miss_rate_decomposes_into_outage_and_over_deadline():
 
 def test_vectorized_serve_matches_scalar_reference():
     """The struct-of-arrays serve step must price each frame exactly like
-    the scalar `_serve_once` reference (queueing adds wait on top of it)."""
+    the scalar `_serve_once` reference (queueing adds wait on top of it).
+    Bottleneck mode: its `_pending` carries the (base, service) pair this
+    test audits; the per-hop twin is below."""
     import dataclasses
     prof = lenet_profile()
-    scn = dataclasses.replace(SMALL, mtbf_s=float("inf"))
+    scn = dataclasses.replace(SMALL, mtbf_s=float("inf"),
+                              queue_model="bottleneck")
     sim = _Simulation(scn, "nearest", 11, prof, False)
     K, Ks = list(prof.output_vector()), prof.input_bytes
     comp = list(prof.compute_vector())
@@ -406,6 +409,119 @@ def test_vectorized_serve_matches_scalar_reference():
         elif ev.kind == EventKind.EPOCH:
             sim.on_epoch(int(round(ev.time / scn.tick_s)))
     assert checked > 50
+
+
+def test_perhop_schedule_sums_match_scalar_reference():
+    """Per-hop twin of the test above: the hop schedule's total service
+    (uplink + stage walls + boundary links) must equal the scalar
+    `_serve_once` path latency at rtol 1e-9 — queueing only ever adds
+    *wait* between hops, never changes the work."""
+    import dataclasses
+    prof = lenet_profile()
+    scn = dataclasses.replace(SMALL, mtbf_s=float("inf"))
+    sim = _Simulation(scn, "nearest", 11, prof, False)
+    assert sim.perhop
+    K, Ks = list(prof.output_vector()), prof.input_bytes
+    comp = list(prof.compute_vector())
+    checked = 0
+    orig = sim.on_tick
+
+    def spy(t):
+        nonlocal checked
+        rows = None
+        if not sim._dirty:
+            rows = sim.table.active_rows(t)
+        orig(t)
+        if sim._pending is None:
+            return
+        rows = sim.table.active_rows(t) if rows is None else rows
+        spb_t = _spb(_masked(sim.rates_t[t], sim.alive))
+        scalar = np.array([_serve_once(sim.table.path[r], int(sim.table.src[r]),
+                                       spb_t, sim.alive, K, Ks, comp,
+                                       sim.speed) for r in rows])
+        got = np.sort(sim._pending["svc"].sum(axis=1))
+        np.testing.assert_allclose(got, np.sort(scalar[np.isfinite(scalar)]),
+                                   rtol=1e-9)
+        checked += len(got)
+
+    sim.on_tick = spy
+    q = sim.tape.queue()
+    while q:
+        ev = q.pop()
+        if ev.kind == EventKind.MOBILITY_TICK:
+            spy(ev.payload)
+            sim._pending = None          # drop frames: pricing-only replay
+        elif ev.kind == EventKind.ARRIVAL:
+            sim.active[ev.payload] = sim.streams[ev.payload]
+        elif ev.kind == EventKind.DEPARTURE:
+            sim.active.pop(ev.payload, None)
+            if sim.placed.pop(ev.payload, None) is not None:
+                sim._dirty = True
+        elif ev.kind == EventKind.EPOCH:
+            sim.on_epoch(int(round(ev.time / scn.tick_s)))
+    assert checked > 50
+
+
+def test_bottleneck_mode_bit_identical_to_pr6_seeds():
+    """`queue_model="bottleneck"` is the frozen compatibility mode: on the
+    fixed PR 6 seeds it must reproduce the pre-refactor results to the
+    last bit (counters integer-equal, latency sums float-equal)."""
+    import dataclasses
+    scn = dataclasses.replace(SMALL, queue_model="bottleneck")
+    r = simulate(scn, "nearest", seed=7)
+    assert (r.served, r.missed, r.outages, r.dropped,
+            r.frames_rejected) == (256, 27, 15, 0, 0)
+    assert float(r.latencies.sum()) == 206.86428925120043
+    r = simulate(scn, "incremental", seed=7)
+    assert (r.served, r.missed, r.outages, r.dropped,
+            r.frames_rejected) == (256, 51, 9, 0, 0)
+    assert float(r.latencies.sum()) == 609.9276542507364
+
+
+def test_perhop_collapses_to_bottleneck_when_uncontended():
+    """With arrivals far apart every queue is empty, so the tandem network
+    must price each frame exactly like the bottleneck model: base + wait +
+    service == Σ hops at rtol 1e-9 (the ISSUE's equivalence acceptance)."""
+    import dataclasses
+    scn = SwarmScenario(duration_ticks=40, arrival_rate_hz=0.02,
+                        mtbf_s=1e9, mttr_s=1.0)
+    for pol in ("nearest", "incremental"):
+        a = simulate(dataclasses.replace(scn, queue_model="bottleneck"),
+                     pol, seed=3)
+        b = simulate(scn, pol, seed=3)
+        assert (a.served, a.missed, a.outages) == (b.served, b.missed,
+                                                   b.outages)
+        np.testing.assert_allclose(np.sort(b.latencies),
+                                   np.sort(a.latencies), rtol=1e-9)
+
+
+def test_perhop_sees_contention_bottleneck_misses():
+    """On a churn tape with multi-node paths the tandem network queues
+    frames at shared relays and uplinks the bottleneck model treats as
+    deterministic — per-hop p99 must sit strictly above bottleneck p99."""
+    import dataclasses
+    rb = simulate(dataclasses.replace(SMALL, queue_model="bottleneck"),
+                  "incremental", seed=7)
+    rp = simulate(SMALL, "incremental", seed=7)
+    fb = rb.latencies[np.isfinite(rb.latencies)]
+    fp = rp.latencies[np.isfinite(rp.latencies)]
+    assert np.percentile(fp, 99) > np.percentile(fb, 99)
+    assert fp.sum() > fb.sum()
+
+
+def test_drift_triggered_resolve_counts_and_cuts_misses():
+    """`resolve_on_drift` re-solves between epochs when mean placement
+    drift crosses the threshold: triggers are counted in SimResult, and
+    on a churn-heavy tape with sparse fixed epochs the early re-solves
+    must not lose to fixed-epoch-only re-solving on miss rate."""
+    import dataclasses
+    base = dataclasses.replace(SMALL, epoch_ticks=30, duration_ticks=90)
+    fixed = simulate(base, "incremental", seed=5)
+    assert fixed.drift_resolves == 0
+    drift = simulate(dataclasses.replace(base, resolve_on_drift=0.05),
+                     "incremental", seed=5)
+    assert drift.drift_resolves > 0
+    assert drift.loss_rate <= fixed.loss_rate
 
 
 def _overload(**kw) -> SwarmScenario:
